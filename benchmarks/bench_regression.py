@@ -1,0 +1,53 @@
+"""Paper Figures 1-4 / 9-15: regression convergence + speedup per scheme."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.experiments import run_regression_experiment
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "repro")
+
+
+def run(P_list=(18, 36, 72), nus=(0.1, 1.0), steps=4000, save=True):
+    rows = []
+    for nu in nus:
+        for P in P_list:
+            t0 = time.time()
+            res = run_regression_experiment(P=P, nu=nu, steps=steps)
+            wall = time.time() - t0
+            for mode, c in res.items():
+                rows.append({
+                    "bench": "regression", "P": P, "nu": nu, "mode": mode,
+                    "final_w2": float(c.w2[-1]),
+                    "best_w2": float(c.w2.min()),
+                    "speedup": float(c.speedup),
+                    "us_per_call": wall / steps * 1e6,
+                })
+            if save:
+                os.makedirs(OUT, exist_ok=True)
+                payload = {m: {"iters": c.iters.tolist(),
+                               "w2": c.w2.tolist(),
+                               "times": c.times.tolist(),
+                               "speedup": c.speedup}
+                           for m, c in res.items()}
+                with open(os.path.join(
+                        OUT, f"regression_P{P}_nu{nu}.json"), "w") as f:
+                    json.dump(payload, f)
+    return rows
+
+
+def main(fast=True):
+    P_list = (18,) if fast else (18, 36, 72)
+    nus = (0.1,) if fast else (0.1, 1.0)
+    steps = 1500 if fast else 6000
+    return run(P_list, nus, steps, save=not fast)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

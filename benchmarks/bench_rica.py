@@ -1,0 +1,52 @@
+"""Paper Figures 5-8 / 11-12 / 16-17: RICA under async SGLD (M2 model)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.experiments import run_rica_experiment
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "repro")
+
+
+def run(P_list=(2, 4, 8), nus=(0.01, 1e-4), steps=600, save=True):
+    rows = []
+    for nu in nus:
+        for P in P_list:
+            t0 = time.time()
+            res = run_rica_experiment(P=P, nu=nu, steps=steps)
+            wall = time.time() - t0
+            for mode, c in res.items():
+                rows.append({
+                    "bench": "rica", "P": P, "nu": nu, "mode": mode,
+                    "final_obj": float(c.objective[-1]),
+                    "final_dist": float(c.dist_to_opt[-1]),
+                    "speedup": float(c.speedup),
+                    "us_per_call": wall / steps * 1e6,
+                })
+            if save:
+                os.makedirs(OUT, exist_ok=True)
+                payload = {m: {"iters": c.iters.tolist(),
+                               "objective": c.objective.tolist(),
+                               "dist": c.dist_to_opt.tolist(),
+                               "times": c.times.tolist(),
+                               "speedup": c.speedup}
+                           for m, c in res.items()}
+                with open(os.path.join(
+                        OUT, f"rica_P{P}_nu{nu}.json"), "w") as f:
+                    json.dump(payload, f)
+    return rows
+
+
+def main(fast=True):
+    P_list = (4,) if fast else (2, 4, 8)
+    nus = (0.01,) if fast else (0.01, 1e-4)
+    steps = 200 if fast else 800
+    return run(P_list, nus, steps, save=not fast)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

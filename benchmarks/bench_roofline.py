@@ -1,0 +1,49 @@
+"""Roofline table: read the dry-run JSONs and emit §Roofline rows."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_all(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows=None) -> list[dict]:
+    rows = rows if rows is not None else load_all()
+    out = []
+    for r in rows:
+        roof = r["roofline"]
+        out.append({
+            "bench": "roofline",
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "mode": r["mode"],
+            "t_compute_ms": round(roof["t_compute"] * 1e3, 3),
+            "t_memory_ms": round(roof["t_memory"] * 1e3, 3),
+            "t_collective_ms": round(roof["t_collective"] * 1e3, 3),
+            "dominant": roof["dominant"],
+            "useful_ratio": round(roof["useful_ratio"], 3),
+            "hbm_args_gib": round(r["memory"].get(
+                "argument_size_in_bytes", 0) / 2**30, 2),
+            "hbm_temp_gib": round(r["memory"].get(
+                "temp_size_in_bytes", 0) / 2**30, 2),
+        })
+    return out
+
+
+def main(fast=True):
+    return table()
+
+
+if __name__ == "__main__":
+    for r in table():
+        print(r)

@@ -1,0 +1,37 @@
+"""Wall-clock speedup model (paper sub-figures b): async vs barrier-sync
+throughput under the M1 (NUMA CPU) and M2 (GPU MPS) worker models."""
+
+from __future__ import annotations
+
+from repro.core import WorkerModel, simulate_async, simulate_sync, speedup_vs_sync
+
+
+def run(seed=0):
+    rows = []
+    settings = [
+        ("M1-numa", dict(cv=0.3, heterogeneity=0.2, update_cost=0.05),
+         (18, 36, 72)),
+        ("M2-mps", dict(cv=0.15, heterogeneity=0.05, update_cost=0.15),
+         (2, 4, 8)),
+    ]
+    for name, kw, Ps in settings:
+        for P in Ps:
+            wm = WorkerModel(num_workers=P, seed=seed, **kw)
+            tr_a = simulate_async(wm, 400 * P, seed=seed)
+            tr_s = simulate_sync(wm, 400, seed=seed)
+            rows.append({
+                "bench": "speedup", "platform": name, "P": P,
+                "speedup": round(speedup_vs_sync(tr_a, tr_s), 3),
+                "mean_delay": round(tr_a.mean_delay, 2),
+                "max_delay": int(tr_a.max_delay),
+            })
+    return rows
+
+
+def main(fast=True):
+    return run()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

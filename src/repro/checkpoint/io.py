@@ -1,0 +1,68 @@
+"""Checkpointing: flat-path npz save/restore for arbitrary pytrees.
+
+Ring-buffer aware: the SGLD delay history is part of the sampler state and
+round-trips like any other leaf.  Writes are atomic (tmp + rename).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "##"
+
+
+def _flatten_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(kp, leaf):
+        path = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        flat[path] = np.asarray(leaf)
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
+    flat = _flatten_paths(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (dtypes preserved from disk)."""
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files if k != "__step__"}
+
+    leaves_with_paths = []
+
+    def visit(kp, leaf):
+        p = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        leaves_with_paths.append(p)
+
+    jax.tree_util.tree_map_with_path(visit, like)
+    treedef = jax.tree_util.tree_structure(like)
+    missing = [p for p in leaves_with_paths if p not in arrays]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(arrays[p]) for p in leaves_with_paths])
+
+
+def checkpoint_step(path: str) -> int | None:
+    with np.load(path) as data:
+        if "__step__" in data.files:
+            return int(data["__step__"])
+    return None

@@ -1,0 +1,29 @@
+"""internvl2-1b — VLM: InternViT + Qwen2-0.5B-style LM [arXiv:2404.16821].
+
+Assigned: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+Per the assignment carve-out, the vision frontend (InternViT + MLP projector)
+is a STUB: ``input_specs`` supplies precomputed patch embeddings (256 tokens)
+prepended to the text stream; we implement the language decoder.
+"""
+
+from repro.configs.base import ArchConfig, _reduce_common
+
+CONFIG = ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    qkv_bias=True,  # Qwen2 LM backbone uses QKV bias
+    frontend="vision",
+    num_frontend_tokens=256,
+    block_pattern=("attn_mlp",),
+)
+
+
+def reduced() -> ArchConfig:
+    return _reduce_common(CONFIG, num_frontend_tokens=16)

@@ -1,0 +1,29 @@
+"""Core: the paper's contribution — delayed-gradient SGLD and its theory."""
+
+from repro.core.delay import (  # noqa: F401
+    RingBuffer,
+    init_ring,
+    push,
+    read_consistent,
+    read_inconsistent,
+    sample_coordinate_delays,
+)
+from repro.core.delay_model import (  # noqa: F401
+    DelayTrace,
+    WorkerModel,
+    constant_delays,
+    simulate_async,
+    simulate_sync,
+    speedup_vs_sync,
+)
+from repro.core.potentials import PolyRegression, Quadratic, RICA  # noqa: F401
+from repro.core.schedules import clip_to_theory, constant, poly_decay, wsd  # noqa: F401
+from repro.core.sgld import SGLDConfig, SGLDSampler, SGLDState  # noqa: F401
+from repro.core.theory import (  # noqa: F401
+    ProblemConstants,
+    gamma_eps_kl,
+    gamma_eps_w2,
+    gamma_terms,
+    n_eps_kl,
+    n_eps_w2,
+)

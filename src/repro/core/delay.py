@@ -1,0 +1,108 @@
+"""Parameter-history ring buffer: the TPU-native stand-in for racy shared memory.
+
+The paper's asynchronous processors read the parameter vector out of shared
+memory while other processors write to it.  On SPMD hardware we reproduce the
+*information pattern* deterministically: every committed iterate is pushed
+into a ring buffer holding the last ``tau + 1`` snapshots (a stacked leading
+axis on every pytree leaf), and stale reads index into it.
+
+Two read models, matching the paper:
+
+- **consistent** (W-Con, Assumption 2.1): the whole vector comes from one
+  snapshot ``X_{k - tau_k}``.
+- **inconsistent** (W-Icon, Assumption 2.3): each *coordinate* ``i`` comes
+  from its own snapshot ``[X_{s_i}]_i`` with ``s_i`` in ``[k - tau_k, k]``.
+
+All functions are jit/grad-safe and shard transparently: the history carries
+the same sharding as the parameters on all non-leading axes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_keys
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class RingBuffer:
+    """History of the last ``depth`` parameter snapshots.
+
+    Attributes:
+      history: pytree; each leaf has shape ``(depth, *leaf_shape)``.
+      head: int32 scalar — slot holding the most recent snapshot.
+      depth: static python int, ``tau + 1``.
+    """
+
+    history: PyTree
+    head: jax.Array
+    depth: int = field(metadata=dict(static=True))
+
+
+def init_ring(params: PyTree, tau: int) -> RingBuffer:
+    """Fill every slot with the initial parameters (delay-0 warm start)."""
+    depth = int(tau) + 1
+    history = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (depth,) + jnp.shape(x)).copy(), params
+    )
+    return RingBuffer(history=history, head=jnp.int32(0), depth=depth)
+
+
+def push(ring: RingBuffer, params: PyTree) -> RingBuffer:
+    """Commit a new snapshot into the next slot."""
+    new_head = (ring.head + 1) % ring.depth
+    history = jax.tree_util.tree_map(
+        lambda h, x: jax.lax.dynamic_update_index_in_dim(h, x.astype(h.dtype), new_head, 0),
+        ring.history,
+        params,
+    )
+    return RingBuffer(history=history, head=new_head, depth=ring.depth)
+
+
+def read_consistent(ring: RingBuffer, delay: jax.Array) -> PyTree:
+    """W-Con: the snapshot committed ``delay`` updates ago (clamped to depth-1)."""
+    delay = jnp.clip(delay, 0, ring.depth - 1)
+    slot = (ring.head - delay) % ring.depth
+    return jax.tree_util.tree_map(
+        lambda h: jax.lax.dynamic_index_in_dim(h, slot, axis=0, keepdims=False),
+        ring.history,
+    )
+
+
+def sample_coordinate_delays(key: jax.Array, ring: RingBuffer, max_delay: jax.Array) -> PyTree:
+    """Per-coordinate delays ``s_i ~ U{0..max_delay}`` for the W-Icon read.
+
+    Returns a pytree of int32 leaves shaped like the parameters.
+    """
+    max_delay = jnp.clip(max_delay, 0, ring.depth - 1)
+    keytree = tree_keys(key, ring.history)
+    return jax.tree_util.tree_map(
+        lambda k, h: jax.random.randint(k, h.shape[1:], 0, max_delay + 1, dtype=jnp.int32),
+        keytree,
+        ring.history,
+    )
+
+
+def read_inconsistent(ring: RingBuffer, delays: PyTree) -> PyTree:
+    """W-Icon: gather ``x_hat[i] = history[(head - s_i) % depth, i]`` per coordinate.
+
+    Pure-jnp reference path (``take_along_axis``).  The Pallas kernel
+    ``repro.kernels.delay_gather`` implements the same contract for the TPU
+    hot path; both are cross-validated in tests.
+    """
+
+    def gather(h, s):
+        slot = (ring.head - s) % ring.depth  # same shape as one snapshot
+        flat_h = h.reshape(ring.depth, -1)
+        flat_slot = slot.reshape(1, -1)
+        out = jnp.take_along_axis(flat_h, flat_slot, axis=0)
+        return out.reshape(h.shape[1:])
+
+    return jax.tree_util.tree_map(gather, ring.history, delays)

@@ -1,0 +1,228 @@
+"""Potentials U for the paper's experiments and for theory validation.
+
+The SGLD target is the Gibbs measure pi(x) ∝ exp(-U(x)/sigma) (eq. (1)-(2)
+of the paper with temperature sigma).  Each potential exposes:
+
+  - ``value(params, batch)``     full/minibatch potential
+  - ``grad(params, batch)``      stochastic gradient (autodiff)
+  - ``sample_batch(key, n)``     draw a data minibatch
+  - strong-convexity / Lipschitz constants ``m``, ``L`` where defined
+    (quadratic and regression; RICA is non-convex — the paper runs it
+    anyway, outside the theory, and so do we).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Quadratic potential — closed-form stationary distribution, used by tests
+# and the tau-sweep theory benchmark.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Quadratic:
+    """U(x) = 1/2 (x - x*)^T A (x - x*), A diagonal SPD.
+
+    Langevin dX = -∇U dt + sqrt(2 sigma) dB has stationary N(x*, sigma A^-1).
+    Stochastic gradients add N(0, grad_noise^2 I).
+    """
+
+    x_star: jnp.ndarray
+    diag: jnp.ndarray
+    grad_noise: float = 0.0
+
+    @property
+    def d(self) -> int:
+        return int(self.x_star.shape[0])
+
+    @property
+    def m(self) -> float:
+        return float(jnp.min(self.diag))
+
+    @property
+    def L(self) -> float:
+        return float(jnp.max(self.diag))
+
+    def value(self, x: jnp.ndarray, batch=None) -> jnp.ndarray:
+        r = x - self.x_star
+        return 0.5 * jnp.sum(self.diag * r * r)
+
+    def grad(self, x: jnp.ndarray, batch=None, *, key=None) -> jnp.ndarray:
+        g = self.diag * (x - self.x_star)
+        if self.grad_noise > 0.0 and key is not None:
+            g = g + self.grad_noise * jax.random.normal(key, g.shape)
+        return g
+
+    def sample_batch(self, key, n: int):
+        return None
+
+    def stationary_cov(self, sigma: float) -> jnp.ndarray:
+        return sigma / self.diag
+
+    @staticmethod
+    def make(key, d: int, m: float = 0.5, L: float = 2.0, grad_noise: float = 0.0) -> "Quadratic":
+        k1, k2 = jax.random.split(key)
+        x_star = jax.random.normal(k1, (d,))
+        if d == 1:
+            diag = jnp.full((1,), m)
+        else:
+            diag = jnp.concatenate([
+                jnp.array([m, L]),
+                jax.random.uniform(k2, (d - 2,), minval=m, maxval=L),
+            ]) if d >= 2 else jnp.full((d,), m)
+        return Quadratic(x_star=x_star, diag=diag, grad_noise=grad_noise)
+
+
+# ---------------------------------------------------------------------------
+# Polynomial regression — paper §3.2.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PolyRegression:
+    """Bayesian linear regression on phi(z) = [z, z^2, z^3, z^4] (+ bias).
+
+    The paper: "a single linear layer with 4 input features and an output
+    feature implementing a 4th degree polynomial regression", observation
+    noise nu ~ N(0, nu_std^2), essentially infinite data (generated on the
+    fly from the true polynomial).
+
+    U(w) = N/(2 nu^2) E_batch[(w·phi + b - y)^2] + prior_prec/2 ||w||^2
+    taken per-example (N=1 scaling) so that m, L are batch-independent.
+    """
+
+    true_coef: jnp.ndarray          # (4,)
+    true_bias: float
+    nu_std: float = 0.1
+    prior_prec: float = 1.0
+    z_scale: float = 1.0
+
+    @property
+    def d(self) -> int:
+        return 5
+
+    def features(self, z: jnp.ndarray) -> jnp.ndarray:
+        return jnp.stack([z, z**2, z**3, z**4], axis=-1)
+
+    def sample_batch(self, key, n: int):
+        kz, ke = jax.random.split(key)
+        z = self.z_scale * jax.random.uniform(kz, (n,), minval=-1.0, maxval=1.0)
+        phi = self.features(z)
+        y = phi @ self.true_coef + self.true_bias + self.nu_std * jax.random.normal(ke, (n,))
+        return phi, y
+
+    def value(self, w: jnp.ndarray, batch) -> jnp.ndarray:
+        phi, y = batch
+        pred = phi @ w[:4] + w[4]
+        fit = 0.5 / (self.nu_std**2) * jnp.mean((pred - y) ** 2)
+        return fit + 0.5 * self.prior_prec * jnp.sum(w * w)
+
+    def grad(self, w: jnp.ndarray, batch, *, key=None) -> jnp.ndarray:
+        return jax.grad(self.value)(w, batch)
+
+    def posterior_moments(self, num: int = 200_000, seed: int = 0, sigma: float = 1.0):
+        """Gaussian posterior N(mu, sigma * Sigma) for the *per-example* U.
+
+        U(w) = 1/(2 nu^2) E[(w·psi - y)^2] + prior/2 ||w||^2 with
+        psi = [phi, 1]; quadratic in w with Hessian
+        A = E[psi psi^T]/nu^2 + prior*I, so pi ∝ exp(-U/sigma) is
+        N(A^-1 b, sigma A^-1).
+        """
+        rng = np.random.default_rng(seed)
+        z = self.z_scale * rng.uniform(-1.0, 1.0, num)
+        psi = np.stack([z, z**2, z**3, z**4, np.ones_like(z)], axis=-1)
+        y = (
+            psi[:, :4] @ np.asarray(self.true_coef)
+            + self.true_bias
+            + self.nu_std * rng.normal(size=num)
+        )
+        A = (psi.T @ psi) / num / self.nu_std**2 + self.prior_prec * np.eye(5)
+        b = (psi.T @ y) / num / self.nu_std**2
+        mu = np.linalg.solve(A, b)
+        cov = sigma * np.linalg.inv(A)
+        return jnp.asarray(mu), jnp.asarray(cov), jnp.asarray(A)
+
+    def constants(self) -> tuple[float, float]:
+        """(m, L) of the per-example expected potential."""
+        _, _, A = self.posterior_moments(num=100_000)
+        ev = np.linalg.eigvalsh(np.asarray(A))
+        return float(ev[0]), float(ev[-1])
+
+    @staticmethod
+    def make(key, nu_std: float = 0.1) -> "PolyRegression":
+        k1, k2 = jax.random.split(key)
+        coef = jax.random.normal(k1, (4,))
+        bias = float(jax.random.normal(k2, ()))
+        return PolyRegression(true_coef=coef, true_bias=bias, nu_std=nu_std)
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction ICA — paper §3.3 (non-convex; outside the theory, as in the
+# paper).  min_W  lambda ||W x||_1 + 1/2 ||W^T W x - x||^2.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RICA:
+    """RICA on image patches.  W has shape (num_features, patch_dim)."""
+
+    patch_dim: int
+    num_features: int
+    lam: float = 0.4
+    _spectrum: np.ndarray = field(default=None, repr=False, compare=False)
+
+    @property
+    def d(self) -> int:
+        return self.num_features * self.patch_dim
+
+    def init_params(self, key) -> jnp.ndarray:
+        w = jax.random.normal(key, (self.num_features, self.patch_dim))
+        return w / jnp.linalg.norm(w, axis=1, keepdims=True)
+
+    def sample_batch(self, key, n: int) -> jnp.ndarray:
+        """Synthetic natural-image-statistics patches: 1/f spectrum.
+
+        Offline stand-in for CIFAR-10 (no dataset downloads in this
+        container) — documented in DESIGN.md §2.
+        """
+        side = int(math.isqrt(self.patch_dim))
+        assert side * side == self.patch_dim, "patch_dim must be a square"
+        freq = jnp.fft.fftfreq(side)
+        f2 = freq[:, None] ** 2 + freq[None, :] ** 2
+        amp = jnp.where(f2 > 0, 1.0 / jnp.sqrt(f2), 0.0)
+        phase = jax.random.uniform(key, (n, side, side), minval=0, maxval=2 * jnp.pi)
+        spec = amp[None] * jnp.exp(1j * phase)
+        img = jnp.real(jnp.fft.ifft2(spec))
+        img = img - jnp.mean(img, axis=(1, 2), keepdims=True)
+        img = img / (jnp.std(img, axis=(1, 2), keepdims=True) + 1e-8)
+        return img.reshape(n, self.patch_dim)
+
+    def value(self, w: jnp.ndarray, batch: jnp.ndarray) -> jnp.ndarray:
+        x = batch  # (n, patch_dim)
+        wx = x @ w.T  # (n, num_features)
+        recon = wx @ w  # (n, patch_dim)
+        sparse = self.lam * jnp.mean(jnp.sum(jnp.abs(wx), axis=-1))
+        fit = 0.5 * jnp.mean(jnp.sum((recon - x) ** 2, axis=-1))
+        return sparse + fit
+
+    def grad(self, w: jnp.ndarray, batch, *, key=None) -> jnp.ndarray:
+        return jax.grad(self.value)(w, batch)
+
+
+def neg_log_posterior_potential(loss_fn, prior_prec: float = 0.0):
+    """Wrap an arbitrary model loss into a potential U for SGLD on pytrees."""
+
+    def u(params, batch):
+        val = loss_fn(params, batch)
+        if prior_prec > 0.0:
+            sq = sum(jnp.sum(p * p) for p in jax.tree_util.tree_leaves(params))
+            val = val + 0.5 * prior_prec * sq
+        return val
+
+    return u

@@ -1,0 +1,51 @@
+"""Step-size schedules: constant, polynomial decay, warmup, WSD.
+
+WSD (warmup-stable-decay) is included because the assigned ``minicpm-2b``
+architecture is defined by it [arXiv:2404.06395]; all schedules compose with
+the Corollary 2.1 ceiling (``clip_to_theory``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(value: float) -> Schedule:
+    return lambda step: jnp.full_like(jnp.asarray(step, jnp.float32), value)
+
+
+def poly_decay(gamma0: float, alpha: float = 0.5, t0: float = 1.0) -> Schedule:
+    """gamma_k = gamma0 / (t0 + k)^alpha — the classic SGLD decreasing schedule."""
+    return lambda step: gamma0 / (t0 + jnp.asarray(step, jnp.float32)) ** alpha
+
+
+def linear_warmup(base: Schedule, warmup_steps: int) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        scale = jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+        return scale * base(step)
+
+    return sched
+
+
+def wsd(peak: float, warmup_steps: int, stable_steps: int, decay_steps: int,
+        final_frac: float = 0.1) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM)."""
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * (step + 1.0) / max(warmup_steps, 1)
+        in_decay = jnp.clip((step - warmup_steps - stable_steps) / max(decay_steps, 1), 0.0, 1.0)
+        decay = peak * (1.0 - (1.0 - final_frac) * in_decay)
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return sched
+
+
+def clip_to_theory(base: Schedule, gamma_max: float) -> Schedule:
+    """Enforce the Corollary 2.1 ceiling on any schedule."""
+    return lambda step: jnp.minimum(base(step), gamma_max)

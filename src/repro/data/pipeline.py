@@ -1,0 +1,75 @@
+"""Host-side data pipeline: double-buffered prefetch + device placement.
+
+The dry-run shapes never allocate, but the real training loop wants batches
+produced off the critical path: ``Prefetcher`` generates the next batch on a
+background thread while the current step runs, and (when a mesh is given)
+places it with the batch sharding the step expects.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+class Prefetcher:
+    """Wrap a batch-generating callable into a prefetching iterator.
+
+    batch_fn(key) -> pytree;  keys are split from ``key`` per step.
+    """
+
+    def __init__(self, batch_fn: Callable[[jax.Array], PyTree], key: jax.Array,
+                 mesh=None, batch_axes=("data",), depth: int = 2):
+        self.batch_fn = batch_fn
+        self.key = key
+        self.mesh = mesh
+        self.batch_axes = tuple(batch_axes)
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _place(self, batch: PyTree) -> PyTree:
+        if self.mesh is None:
+            return batch
+
+        def put(x):
+            spec = P(self.batch_axes if self.batch_axes else None,
+                     *([None] * (x.ndim - 1))) if x.ndim else P()
+            return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+        return jax.tree_util.tree_map(put, batch)
+
+    def _worker(self):
+        key = self.key
+        while not self.stop.is_set():
+            key, sub = jax.random.split(key)
+            batch = self._place(self.batch_fn(sub))
+            while not self.stop.is_set():
+                try:
+                    self.q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> Iterator[PyTree]:
+        return self
+
+    def __next__(self) -> PyTree:
+        return self.q.get()
+
+    def close(self):
+        self.stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self.thread.join(timeout=2.0)

@@ -1,0 +1,2 @@
+from repro.experiments.regression import run_regression_experiment  # noqa: F401
+from repro.experiments.rica import run_rica_experiment  # noqa: F401

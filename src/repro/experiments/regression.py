@@ -1,0 +1,103 @@
+"""Paper §3.2: polynomial-regression posterior sampling, Sync vs W-Con vs
+W-Icon, with the event-driven delay/wall-clock model standing in for the
+paper's NUMA box (M1).  Produces the data behind Figures 1-4 / 9-15.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    PolyRegression,
+    SGLDConfig,
+    SGLDSampler,
+    WorkerModel,
+    simulate_async,
+    simulate_sync,
+    speedup_vs_sync,
+)
+from repro.metrics import w2_to_gaussian
+
+MODES = ("sync", "consistent", "inconsistent")  # paper: Sync, W-Con, W-Icon
+
+
+@dataclass
+class Curve:
+    iters: np.ndarray
+    w2: np.ndarray
+    times: np.ndarray
+    traj2d: np.ndarray      # first two coordinates of the trajectory
+    speedup: float = 1.0
+
+
+def _w2_curve(traj, mu, cov, eval_every=100, window=400):
+    idx, out = [], []
+    for k in range(window, traj.shape[0], eval_every):
+        samp = jnp.asarray(traj[k - window:k])
+        out.append(float(w2_to_gaussian(samp, mu, cov)))
+        idx.append(k)
+    return np.asarray(idx), np.asarray(out)
+
+
+def run_regression_experiment(P: int = 18, nu: float = 0.1,
+                              steps: int = 6000, gamma: float = 2e-4,
+                              sigma: float = 1e-3, batch: int = 256,
+                              tau_cap: int = 16, seed: int = 0,
+                              modes=MODES) -> dict[str, Curve]:
+    """Returns one Curve per update scheme.
+
+    Sync consumes P gradients per commit (paper's summed update) so at equal
+    gradient-evaluation budget it performs steps//P commits; its wall clock
+    comes from the barrier model, async from the free-running model.
+    """
+    reg = PolyRegression.make(jax.random.PRNGKey(seed), nu_std=nu)
+    mu, cov, _ = reg.posterior_moments(sigma=sigma)
+    wm = WorkerModel(num_workers=P, seed=seed)
+    results: dict[str, Curve] = {}
+
+    tr_sync = simulate_sync(wm, max(steps // P, 1), seed=seed)
+    tr_async = simulate_async(wm, steps, seed=seed)
+
+    for mode in modes:
+        is_sync = mode == "sync"
+        n_commits = max(steps // P, 1) if is_sync else steps
+        eff_batch = batch * P if is_sync else batch
+        cfg = SGLDConfig(mode=mode, gamma=gamma, sigma=sigma,
+                         tau=tau_cap if not is_sync else 0)
+
+        def grad(p, key):
+            return jax.grad(reg.value)(p, reg.sample_batch(key, eff_batch))
+
+        sampler = SGLDSampler(cfg, grad)
+        state = sampler.init(mu + 1.0, jax.random.PRNGKey(seed + 1))
+        keys = jax.random.split(jax.random.PRNGKey(seed + 2), n_commits)
+        if is_sync:
+            delays = jnp.zeros((n_commits,), jnp.int32)
+            times = tr_sync.commit_times[:n_commits]
+        else:
+            delays = jnp.asarray(np.minimum(tr_async.delays[:n_commits],
+                                            tau_cap))
+            times = tr_async.commit_times[:n_commits]
+        state, traj = jax.jit(lambda s: sampler.run(s, keys, delays))(state)
+        traj = np.asarray(traj)
+        ev = max(10, n_commits // 40)
+        win = max(50, min(400, n_commits // 4))
+        idx, w2 = _w2_curve(traj, mu, cov, eval_every=ev, window=win)
+        results[mode] = Curve(iters=idx, w2=w2, times=times[idx - 1],
+                              traj2d=traj[:, :2])
+
+    # relative speedup at equal gradient evaluations (paper subfigure b)
+    sp = speedup_vs_sync(tr_async, tr_sync)
+    for mode in modes:
+        results[mode].speedup = 1.0 if mode == "sync" else sp
+    return results
+
+
+def posterior_for(nu: float, sigma: float, seed: int = 0):
+    reg = PolyRegression.make(jax.random.PRNGKey(seed), nu_std=nu)
+    mu, cov, _ = reg.posterior_moments(sigma=sigma)
+    return reg, mu, cov

@@ -1,0 +1,79 @@
+"""Jit'd public wrappers: pad/reshape pytrees into kernel-friendly tiles.
+
+``fused_langevin_update(params, grads, seed, gamma, scale)`` applies the
+fused SGLD update leafwise; ``fused_delay_gather(ring_history, slots)`` does
+the W-Icon read.  ``interpret=True`` (default on CPU) runs the kernel body in
+Python for validation; on TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import delay_gather as dg
+from repro.kernels import langevin_update as lu
+from repro.utils import round_up
+
+PyTree = Any
+
+
+def _pad_to_tiles(flat: jnp.ndarray, lanes: int, rows_mult: int):
+    n = flat.shape[0]
+    rows = max(rows_mult, round_up(-(-n // lanes), rows_mult))
+    padded = jnp.zeros((rows * lanes,), flat.dtype).at[:n].set(flat)
+    return padded.reshape(rows, lanes), n
+
+
+def langevin_update_flat(x: jnp.ndarray, g: jnp.ndarray, seed, gamma, scale,
+                         *, interpret: bool = True) -> jnp.ndarray:
+    """Fused update on a flat fp32 vector (any length)."""
+    x2, n = _pad_to_tiles(x.astype(jnp.float32), lu.LANES, lu.BLOCK_ROWS)
+    g2, _ = _pad_to_tiles(g.astype(jnp.float32), lu.LANES, lu.BLOCK_ROWS)
+    out = lu.langevin_update_2d(x2, g2, jnp.asarray(seed, jnp.uint32),
+                                gamma, scale, interpret=interpret)
+    return out.reshape(-1)[:n].astype(x.dtype)
+
+
+def fused_langevin_update(params: PyTree, grads: PyTree, seed, gamma, scale,
+                          *, interpret: bool = True) -> PyTree:
+    """Leafwise fused SGLD update with a distinct seed fold per leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    gleaves = jax.tree_util.tree_leaves(grads)
+    seed = jnp.asarray(seed, jnp.uint32)
+    out = []
+    for i, (p, g) in enumerate(zip(leaves, gleaves)):
+        leaf_seed = jnp.stack([seed[0] ^ jnp.uint32((0x85EBCA6B * (i + 1)) & 0xFFFFFFFF),
+                               seed[1] + jnp.uint32(i)])
+        flat = langevin_update_flat(p.reshape(-1), g.reshape(-1), leaf_seed,
+                                    gamma, scale, interpret=interpret)
+        out.append(flat.reshape(p.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def delay_gather_flat(history: jnp.ndarray, slots: jnp.ndarray,
+                      *, interpret: bool = True) -> jnp.ndarray:
+    """history: (depth, N) any N; slots: (N,) int32."""
+    depth, n = history.shape
+    n_pad = max(dg.BLOCK, round_up(n, dg.BLOCK))
+    h = jnp.zeros((depth, n_pad), history.dtype).at[:, :n].set(history)
+    s = jnp.zeros((n_pad,), jnp.int32).at[:n].set(slots)
+    out = dg.delay_gather_1d(h, s, interpret=interpret)
+    return out[:n]
+
+
+def fused_delay_gather(ring_history: PyTree, slots: PyTree, head, depth: int,
+                       *, interpret: bool = True) -> PyTree:
+    """W-Icon read over a ring-buffer pytree (leaves (depth, *shape)) with
+    per-coordinate delay pytree ``slots`` (leaves shaped like params)."""
+
+    def one(h, s):
+        shape = h.shape[1:]
+        slot = jnp.mod(head - s.reshape(-1), depth).astype(jnp.int32)
+        flat = delay_gather_flat(h.reshape(depth, -1), slot, interpret=interpret)
+        return flat.reshape(shape)
+
+    return jax.tree_util.tree_map(one, ring_history, slots)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-identical math)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rng import normal_from_counter
+
+
+def langevin_update_ref(x: jnp.ndarray, g: jnp.ndarray, seed: jnp.ndarray,
+                        gamma, scale) -> jnp.ndarray:
+    """x, g: (R, L) float32; seed (2,) uint32 — same counter scheme as the
+    kernel (row-major global element index)."""
+    R, L = x.shape
+    counter = jnp.arange(R * L, dtype=jnp.uint32).reshape(R, L)
+    xi = normal_from_counter(seed[0], seed[1], counter)
+    return x - jnp.float32(gamma) * g + jnp.float32(scale) * xi
+
+
+def delay_gather_ref(history: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
+    """history: (depth, N); slots: (N,) -> (N,)."""
+    return jnp.take_along_axis(history, slots[None, :], axis=0)[0]

@@ -1,0 +1,59 @@
+"""Counter-based RNG (threefry2x32) + Box-Muller, in plain jnp ops.
+
+Used *inside* the Pallas langevin_update kernel (plain jnp lowers fine in
+kernels) and by the pure-jnp oracle in ref.py — so kernel and oracle are
+bit-identical by construction.  Counter = global element index, key = user
+seed: reproducible regardless of block shape or sharding.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = 0x1BD11BDA  # python int: jnp constants must be created in-trace
+                      # (pallas kernels reject closure-captured arrays)
+
+
+def _rotl(x, r):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(key0, key1, x0, x1):
+    """20-round threefry2x32 (same schedule as JAX's reference)."""
+    x0, x1 = x0.astype(jnp.uint32), x1.astype(jnp.uint32)
+    k0 = jnp.uint32(key0)
+    k1 = jnp.uint32(key1)
+    k2 = k0 ^ k1 ^ jnp.uint32(_PARITY)
+    ks = (k0, k1, k2)
+
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for block in range(5):
+        rots = _ROTATIONS[block % 2]
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(block + 1) % 3]
+        x1 = x1 + ks[(block + 2) % 3] + jnp.uint32(block + 1)
+    return x0, x1
+
+
+def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """uint32 -> float32 uniform in (0, 1): top 24 bits, offset by 2^-25."""
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2**-24)
+    return u + jnp.float32(2**-25)
+
+
+def normal_from_counter(seed0, seed1, counter: jnp.ndarray) -> jnp.ndarray:
+    """Standard normals from int32/uint32 element counters (Box-Muller).
+
+    counter: any-shape uint32 global element index (pairs share bits).
+    """
+    c = counter.astype(jnp.uint32)
+    b0, b1 = threefry2x32(seed0, seed1, c, c ^ jnp.uint32(0x9E3779B9))
+    u1 = uniform_from_bits(b0)
+    u2 = uniform_from_bits(b1)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(jnp.float32(2.0 * 3.14159265358979) * u2)

@@ -1,0 +1,155 @@
+"""Loop-aware analytic cost model (FLOPs + HBM-traffic) from the jaxpr.
+
+WHY: ``compiled.cost_analysis()`` counts each while-loop body ONCE — verified
+in this container (a 10-iteration scan of a 512^3 matmul reports the flops of
+a single matmul).  Every layer stack / microbatch / flash-attention chunk in
+this framework is a static-length ``lax.scan``, so XLA's numbers undercount
+by orders of magnitude.  This walker traverses the (grad-transformed) jaxpr
+and multiplies by scan lengths — FLOPs are *exact* for dot/conv ops.
+
+Traffic model (``bytes``): a perfectly-fused executor —
+  - dot_general / conv: operands + result stream HBM once,
+  - gather/scatter/dynamic-slice/top_k/sort/cumsum/RNG: in + out,
+  - scan: xs/ys once in total + carry read+write per iteration,
+  - elementwise chains: assumed fused into neighbors (not counted).
+This is a *lower bound* on real traffic; EXPERIMENTS.md §Roofline discusses
+the deviation.  Collective bytes come from the post-SPMD HLO text (see
+roofline.collective_bytes_loop_aware) since GSPMD inserts them after jaxpr.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+TRAFFIC_PRIMS = {
+    "cumsum", "sort", "top_k", "argsort",
+    "threefry2x32", "random_bits", "random_seed", "random_wrap",
+    "reduce_sum", "reduce_max", "reduce_min",
+}
+
+
+def _size_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    matmul_flops: float = 0.0
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.matmul_flops + o.matmul_flops)
+
+    def __mul__(self, k):
+        return Cost(self.flops * k, self.bytes * k, self.matmul_flops * k)
+
+
+def _dot_cost(eqn) -> Cost:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    k = int(np.prod([lhs.shape[i] for i in lc])) if lc else 1
+    b = int(np.prod([lhs.shape[i] for i in lb])) if lb else 1
+    m = int(np.prod([d for i, d in enumerate(lhs.shape) if i not in lc + lb])) or 1
+    n = int(np.prod([d for i, d in enumerate(rhs.shape) if i not in rc + rb])) or 1
+    fl = 2.0 * b * m * n * k
+    by = _size_bytes(lhs) + _size_bytes(rhs) + _size_bytes(eqn.outvars[0].aval)
+    return Cost(flops=fl, bytes=by, matmul_flops=fl)
+
+
+def _conv_cost(eqn) -> Cost:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    kernel_elems = int(np.prod(rhs.shape))
+    fl = 2.0 * int(np.prod(out.shape)) * kernel_elems / max(rhs.shape[-1], 1)
+    by = sum(_size_bytes(v.aval) for v in eqn.invars) + _size_bytes(out)
+    return Cost(flops=fl, bytes=by)
+
+
+def _sub_jaxprs(eqn):
+    """(closed_jaxpr, multiplier) pairs referenced by this eqn."""
+    p = eqn.params
+    name = eqn.primitive.name
+    if name == "scan":
+        return [(p["jaxpr"], int(p["length"]))]
+    if name == "while":
+        return [(p["body_jaxpr"], 1), (p["cond_jaxpr"], 1)]
+    if name == "cond":
+        return [(bj, 1) for bj in p["branches"]]
+    out = []
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p and p[key] is not None:
+            out.append((p[key], 1))
+    return out
+
+
+def jaxpr_cost(jaxpr, scale: float = 1.0) -> Cost:
+    """jaxpr: ClosedJaxpr or Jaxpr.
+
+    ``scale`` converts global (logical-shape) costs to per-device: ops
+    outside shard_map are assumed evenly sharded (x 1/num_devices); inside a
+    shard_map body shapes are already per-device (scale resets to 1).
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    total = Cost()
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total = total + _dot_cost(eqn) * scale
+        elif name == "conv_general_dilated":
+            total = total + _conv_cost(eqn) * scale
+        elif name == "dynamic_update_slice":
+            # in-place (XLA aliases the buffer): traffic = read+write the slot
+            total = total + Cost(bytes=2.0 * _size_bytes(eqn.invars[1].aval)) * scale
+        elif name == "dynamic_slice":
+            total = total + Cost(bytes=2.0 * _size_bytes(eqn.outvars[0].aval)) * scale
+        elif name == "gather":
+            by = (_size_bytes(eqn.outvars[0].aval)
+                  + _size_bytes(eqn.invars[1].aval))
+            total = total + Cost(bytes=2.0 * by) * scale
+        elif name in ("scatter", "scatter-add", "scatter_add"):
+            by = (2.0 * _size_bytes(eqn.invars[2].aval)
+                  + _size_bytes(eqn.invars[1].aval))
+            total = total + Cost(bytes=by) * scale
+        elif name in TRAFFIC_PRIMS:
+            by = (sum(_size_bytes(v.aval) for v in eqn.invars)
+                  + sum(_size_bytes(v.aval) for v in eqn.outvars))
+            total = total + Cost(bytes=by) * scale
+        subs = _sub_jaxprs(eqn)
+        if name == "scan":
+            sub, length = subs[0]
+            inner_cost = jaxpr_cost(sub, scale)
+            n_carry = eqn.params["num_carry"]
+            n_consts = eqn.params["num_consts"]
+            # carries are buffer-aliased in place (body ops touching them are
+            # already counted); xs/ys stream HBM once in total
+            xs_bytes = sum(_size_bytes(v.aval)
+                           for v in eqn.invars[n_consts + n_carry:])
+            ys_bytes = sum(_size_bytes(v.aval) for v in eqn.outvars[n_carry:])
+            total = total + inner_cost * length
+            total = total + Cost(bytes=(xs_bytes + ys_bytes)) * scale
+        elif name == "shard_map":
+            for sub, mult in subs:
+                total = total + jaxpr_cost(sub, 1.0) * mult
+        else:
+            for sub, mult in subs:
+                total = total + jaxpr_cost(sub, scale) * mult
+    return total
+
+
+def step_cost(fn, *args, num_devices: int = 1) -> Cost:
+    """Per-device cost of fn(*args) (args may be ShapeDtypeStructs)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    scale = 1.0 / max(num_devices, 1)
+    c = jaxpr_cost(closed, scale)
+    io = sum(_size_bytes(v.aval) for v in closed.jaxpr.invars)
+    io += sum(_size_bytes(v.aval) for v in closed.jaxpr.outvars)
+    return c + Cost(bytes=float(io) * scale)

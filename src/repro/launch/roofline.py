@@ -1,0 +1,235 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per DESIGN/EXPERIMENTS:
+
+    compute    = HLO_FLOPs_per_device                / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device                / HBM_bw_per_chip
+    collective = collective_bytes_per_device         / ICI_bw_per_chip
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (per-partition after
+SPMD).  Collective bytes are NOT in cost_analysis: we parse the post-SPMD HLO
+text and sum the result-buffer sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (per-device view).
+
+Hardware constants (TPU v5e target): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (per-device collective bytes / this)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,1024]{1,0} all-gather(...)   or   (f32[8], f32[8]) all-reduce
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _buffer_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _line_collective(s: str):
+    """(kind, bytes) if this HLO line is a collective op, else None."""
+    for kind in _COLLECTIVES:
+        # match ` = <shape> kind(` — -done lines don't match so async ops
+        # are counted once (on -start)
+        m = re.search(r"=\s+((?:\([^)]*\))|(?:\S+))\s+" + kind
+                      + r"(?:-start)?\(", s)
+        if m:
+            return kind, _buffer_bytes(m.group(1))
+    return None
+
+
+_COMP_HEADER = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),.*?(?:condition=%?([\w.\-]+)).*?(?:body=%?([\w.\-]+))"
+    r"|while\(.*?\),.*?(?:body=%?([\w.\-]+)).*?(?:condition=%?([\w.\-]+))")
+_CALL_RE = re.compile(r"\scall\(.*?to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str) -> tuple[dict[str, list[str]], str]:
+    """name -> body lines; also returns the ENTRY computation name."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER.match(line)
+        if m and "{" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_body: list[str]) -> int:
+    """Trip count of a jax scan's while: the bound constant in its cond."""
+    best = 1
+    for line in cond_body:
+        if "compare" in line or "constant" in line:
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Loop-aware per-device collective bytes from post-SPMD HLO.
+
+    XLA's cost analysis counts while bodies once; jax lowers every lax.scan
+    to a while whose trip count is a compile-time constant in the condition
+    computation — we recurse through while/call edges multiplying by it.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    memo: dict[str, dict[str, float]] = {}
+
+    def visit(name: str) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {k: 0.0 for k in _COLLECTIVES}  # cycle guard
+        out = {k: 0.0 for k in _COLLECTIVES}
+        for line in comps.get(name, ()):
+            col = _line_collective(line)
+            if col:
+                out[col[0]] += col[1]
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond = wm.group(1) or wm.group(4)
+                body = wm.group(2) or wm.group(3)
+                trip = _trip_count(comps.get(cond, []))
+                sub = visit(body)
+                for k in out:
+                    out[k] += trip * sub[k]
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                sub = visit(cm.group(1))
+                for k in out:
+                    out[k] += sub[k]
+        memo[name] = out
+        return out
+
+    if entry is None:
+        # fallback: flat scan, no loop awareness
+        out = {k: 0.0 for k in _COLLECTIVES}
+        for line in hlo_text.splitlines():
+            col = _line_collective(line.strip())
+            if col:
+                out[col[0]] += col[1]
+        return {k: int(v) for k, v in out.items()}
+    return {k: int(v) for k, v in visit(entry).items()}
+
+
+@dataclass
+class Roofline:
+    name: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_global: float
+    hlo_flops_global: float
+    useful_ratio: float
+
+    def summary(self) -> str:
+        return (f"{self.name}: compute {self.t_compute*1e3:.3f}ms, "
+                f"memory {self.t_memory*1e3:.3f}ms, "
+                f"collective {self.t_collective*1e3:.3f}ms "
+                f"-> {self.dominant}-bound; useful={self.useful_ratio:.2f}")
+
+
+def analyze(name: str, compiled, num_devices: int, model_flops_global: float,
+            hlo_text: str | None = None, jaxpr_cost=None) -> Roofline:
+    """jaxpr_cost: a launch.jaxpr_cost.Cost (per-device, loop-aware).  When
+    given it supersedes XLA's cost_analysis, which undercounts loop bodies
+    (see jaxpr_cost module docstring)."""
+    if jaxpr_cost is not None:
+        flops = float(jaxpr_cost.flops)
+        byts = float(jaxpr_cost.bytes)
+    else:
+        cost = compiled.cost_analysis()
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    coll_total = float(sum(coll.values()))
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll_total / ICI_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                   key=lambda kv: kv[1])[0]
+    hlo_global = flops * num_devices
+    return Roofline(
+        name=name,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=coll_total,
+        collective_breakdown=coll,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        dominant=dominant,
+        model_flops_global=model_flops_global,
+        hlo_flops_global=hlo_global,
+        useful_ratio=(model_flops_global / hlo_global) if hlo_global else 0.0,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D forward-only (N = active
+    params, D = global tokens processed by the step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def memory_report(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    rep = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            rep[k] = int(v)
+    return rep

@@ -1,0 +1,88 @@
+"""CLI launcher: train any assigned architecture with async-SGLD.
+
+Real-hardware entry point (and CPU-reduced driver with --reduced):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
+        --steps 50 --mode pipeline --batch 8 --seq 128
+
+On a TPU slice, omit --reduced: the production mesh is built, parameters are
+initialized sharded (init under jit with out_shardings), and the train step
+runs under the mesh with the shape's microbatching.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import SHAPES, ShapeConfig, get_arch, get_reduced
+from repro.core import SGLDConfig, WorkerModel, simulate_async
+from repro.data import make_batch
+from repro.models.transformer import Model, init_params
+from repro.train.loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale smoke variant of the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "consistent", "inconsistent", "pipeline"])
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=8,
+                    help="virtual workers for the delay trace")
+    ap.add_argument("--gamma", type=float, default=1e-3)
+    ap.add_argument("--sigma", type=float, default=1e-5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None, help="checkpoint path")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    model = Model(cfg, mesh=None)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, mode={args.mode}")
+
+    sgld_cfg = SGLDConfig(mode=args.mode, gamma=args.gamma, sigma=args.sigma,
+                          tau=args.tau if args.mode in ("consistent",
+                                                        "inconsistent") else 0)
+    sampler, step_fn = make_train_step(model, sgld_cfg)
+    state = sampler.init(params, key)
+    jstep = jax.jit(step_fn)
+
+    delays = None
+    if args.mode in ("consistent", "inconsistent"):
+        trace = simulate_async(WorkerModel(num_workers=args.workers,
+                                           seed=args.seed), args.steps,
+                               seed=args.seed)
+        delays = np.minimum(trace.delays, args.tau)
+
+    t0 = time.time()
+    for k in range(args.steps):
+        key, bk = jax.random.split(key)
+        batch = make_batch(cfg, shape, bk, "train")
+        d = int(delays[k]) if delays is not None else 0
+        state, metrics = jstep(state, batch, d)
+        if k % 10 == 0 or k == args.steps - 1:
+            print(f"step {k:4d} loss {float(metrics['loss']):8.4f} "
+                  f"({time.time()-t0:6.1f}s)", flush=True)
+    if args.save:
+        save_checkpoint(args.save, state.params, step=args.steps)
+        print("saved", args.save)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.metrics.kl import gaussian_kl, kl_samples_to_gaussian, knn_kl_estimate  # noqa: F401
+from repro.metrics.wasserstein import (  # noqa: F401
+    gaussian_w2,
+    sinkhorn_w2,
+    w2_empirical_1d,
+    w2_to_gaussian,
+)

@@ -1,0 +1,46 @@
+"""KL divergence estimators (the paper's second convergence metric)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gaussian_kl(mu1, cov1, mu2, cov2) -> jnp.ndarray:
+    """KL(N(mu1,cov1) || N(mu2,cov2)) closed form."""
+    mu1, mu2 = jnp.atleast_1d(mu1), jnp.atleast_1d(mu2)
+    cov1, cov2 = jnp.atleast_2d(cov1), jnp.atleast_2d(cov2)
+    d = mu1.shape[0]
+    c2inv = jnp.linalg.inv(cov2)
+    diff = mu2 - mu1
+    term_tr = jnp.trace(c2inv @ cov1)
+    term_quad = diff @ c2inv @ diff
+    _, ld1 = jnp.linalg.slogdet(cov1)
+    _, ld2 = jnp.linalg.slogdet(cov2)
+    return 0.5 * (term_tr + term_quad - d + ld2 - ld1)
+
+
+def kl_samples_to_gaussian(samples: jnp.ndarray, mu, cov) -> jnp.ndarray:
+    """Moment-matched KL of an iterate cloud to a Gaussian target."""
+    m = jnp.mean(samples, axis=0)
+    c = jnp.atleast_2d(jnp.cov(samples, rowvar=False))
+    c = c + 1e-9 * jnp.eye(c.shape[0])
+    return gaussian_kl(m, c, jnp.atleast_1d(mu), jnp.atleast_2d(cov))
+
+
+def knn_kl_estimate(x: jnp.ndarray, y: jnp.ndarray, k: int = 1) -> jnp.ndarray:
+    """Nonparametric k-NN KL(P||Q) estimator (Wang et al. 2009) between
+    samples x ~ P (n, d) and y ~ Q (m, d)."""
+    n, d = x.shape
+    m = y.shape[0]
+
+    def kth_dist(a, b, k, skip_self):
+        d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)
+        if skip_self:
+            d2 = d2 + jnp.where(jnp.eye(a.shape[0], b.shape[0], dtype=bool), jnp.inf, 0.0)
+        vals = -jax.lax.top_k(-d2, k)[0][:, -1]
+        return jnp.sqrt(jnp.clip(vals, 1e-30, None))
+
+    rho = kth_dist(x, x, k, skip_self=True)
+    nu = kth_dist(x, y, k, skip_self=False)
+    return d * jnp.mean(jnp.log(nu / rho)) + jnp.log(m / (n - 1.0))

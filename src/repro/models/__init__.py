@@ -1,0 +1,6 @@
+from repro.models.transformer import (  # noqa: F401
+    Model,
+    init_params,
+    loss_fn,
+    partition_tree,
+)

@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated (SwiGLU) and plain (GELU, for MusicGen)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+
+
+def init_mlp(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "gelu":  # plain 2-matrix MLP
+        k1, k2 = jax.random.split(key)
+        return {
+            "w_up": dense_init(k1, (d, f), dtype),
+            "w_down": dense_init(k2, (f, d), dtype),
+        }
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), dtype),
+        "w_up": dense_init(k2, (d, f), dtype),
+        "w_down": dense_init(k3, (f, d), dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    act = activation(cfg.act)
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = act(x @ params["w_up"])
+    return h @ params["w_down"]

@@ -1,0 +1,169 @@
+"""Selective state-space heads (Mamba-2 / SSD formulation) — TPU-adapted.
+
+HARDWARE ADAPTATION (DESIGN.md §2): Mamba-1's per-(channel, state) selective
+scan is a GPU-shaped algorithm (deep sequential recurrence, poor MXU
+utilization).  We implement the SSD (state-space duality) form used by
+Mamba-2: scalar decay per head per step, so a sequence chunk becomes two
+MXU-friendly matmuls (intra-chunk "attention-like" term + inter-chunk state
+carry) and the recurrence runs only across chunks (lax.scan).  ``ssm_state``
+(=16 for hymba) is the per-head state width n.
+
+Shapes: inner dim di = 2*d_model, heads H (= attention heads), head dim
+p = di/H, state n.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+def init_ssm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    n = cfg.ssm_state
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, di), jnp.float32) / math.sqrt(K)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "bc_proj": dense_init(ks[2], (di, 2 * n), dtype),
+        "dt_w": dense_init(ks[3], (di, H), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (H,), minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray        # (B, H, p, n) fp32
+    conv: jnp.ndarray     # (B, K-1, di) last inputs for depthwise conv
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+    di = 2 * cfg.d_model
+    H, n, K = cfg.num_heads, cfg.ssm_state, cfg.ssm_conv
+    p = di // H
+    return SSMState(
+        h=jnp.zeros((batch, H, p, n), jnp.float32),
+        conv=jnp.zeros((batch, K - 1, di), dtype),
+    )
+
+
+def _depthwise_conv(x, conv_w, conv_b, conv_state=None):
+    """Causal depthwise conv along seq. x: (B, S, di); conv_w: (K, di)."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out + conv_b, new_state
+
+
+def _ssd_chunk_scan(xh, bt, ct, dt, a, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, p); bt, ct: (B, S, n); dt: (B, S, H) (post-softplus);
+    a: (H,) negative decay rate.  Returns y: (B, S, H, p) and final state
+    h: (B, H, p, n).
+    """
+    B, S, H, p = xh.shape
+    n = bt.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0, f"seq {S} not divisible by ssm chunk {c}"
+    nc = S // c
+
+    # log-decay per step: la = dt * a  (negative), (B, S, H)
+    la = dt * a[None, None, :]
+    xc = xh.reshape(B, nc, c, H, p).swapaxes(0, 1)
+    bc = bt.reshape(B, nc, c, n).swapaxes(0, 1)
+    cc = ct.reshape(B, nc, c, n).swapaxes(0, 1)
+    dtc = dt.reshape(B, nc, c, H).swapaxes(0, 1)
+    lac = la.reshape(B, nc, c, H).swapaxes(0, 1)
+
+    def chunk_step(h, inp):
+        xb, bb, cb, dtb, lab = inp  # (B,c,H,p),(B,c,n),(B,c,n),(B,c,H),(B,c,H)
+        seg = jnp.cumsum(lab, axis=1)  # (B, c, H) log decay from chunk start
+        # intra-chunk: scores[t,s] = (C_t·B_s) * exp(seg_t - seg_s) * dt_s, s<=t
+        logw = seg[:, :, None, :] - seg[:, None, :, :]  # (B, c, c, H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(logw), 0.0)
+        cb32, bb32 = cb.astype(jnp.float32), bb.astype(jnp.float32)
+        scores = jnp.einsum("btn,bsn->bts", cb32, bb32)[..., None] * w  # (B,c,c,H)
+        scores = scores * dtb[:, None, :, :]  # dt_s
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores, xb.astype(jnp.float32))
+        # inter-chunk: y_t += C_t · (exp(seg_t) * h)
+        decay_t = jnp.exp(seg)  # (B, c, H)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", cb32, h, decay_t)
+        # state update: h' = exp(seg_end)*h + sum_s exp(seg_end-seg_s) dt_s x_s B_s
+        seg_end = seg[:, -1:, :]  # (B,1,H)
+        w_end = jnp.exp(seg_end - seg) * dtb  # (B, c, H)
+        h_new = (jnp.exp(seg_end[:, 0, :])[:, :, None, None] * h
+                 + jnp.einsum("bch,bchp,bcn->bhpn", w_end,
+                              xb.astype(jnp.float32), bb32))
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, p, n), jnp.float32)
+    h, yc = jax.lax.scan(chunk_step, h0, (xc, bc, cc, dtc, lac))
+    y = yc.swapaxes(0, 1).reshape(B, S, H, p)
+    return y, h
+
+
+def apply_ssm(params, x, cfg, *, chunk: int = 64, state: SSMState | None = None):
+    """Full-sequence SSD block.  x: (B, S, d) -> (B, S, d).
+
+    With ``state`` (decode) S must be 1 and the recurrence is single-step.
+    """
+    B, S, d = x.shape
+    di = 2 * d
+    H, n = cfg.num_heads, cfg.ssm_state
+    p = di // H
+
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+    conv_state = state.conv if state is not None else None
+    xi, new_conv = _depthwise_conv(xi, params["conv_w"], params["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    bcm = xi @ params["bc_proj"]  # (B, S, 2n)
+    bt, ct = jnp.split(bcm, 2, axis=-1)
+    dt = jax.nn.softplus((xi @ params["dt_w"]).astype(jnp.float32)
+                         + params["dt_bias"])  # (B, S, H)
+    a = -jnp.exp(params["a_log"])  # (H,) negative
+    xh = xi.reshape(B, S, H, p)
+
+    if state is None:
+        y, h_final = _ssd_chunk_scan(xh, bt, ct, dt, a, chunk)  # a negative
+        new_state = None
+    else:
+        # single-step decode: h' = exp(dt*a) h + dt * x ⊗ B ; y = h'·C
+        la = jnp.exp(dt[:, 0] * a[None, :])  # (B, H)
+        xb = jnp.einsum("bhp,bn->bhpn", xh[:, 0].astype(jnp.float32),
+                        bt[:, 0].astype(jnp.float32))
+        h_new = la[:, :, None, None] * state.h + dt[:, 0][:, :, None, None] * xb
+        y = jnp.einsum("bhpn,bn->bhp", h_new, ct[:, 0].astype(jnp.float32))[:, None]
+        new_state = SSMState(h=h_new, conv=new_conv)
+        h_final = h_new
+
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if state is None:
+        return out
+    return out, new_state

@@ -1,0 +1,440 @@
+"""Model assembly: init, forward (train/prefill), decode (serve), loss.
+
+One ``Model`` class covers all 10 assigned architectures via
+``cfg.block_pattern``:
+
+- ``attn_mlp``   dense decoder layer (llama-style; qk-norm / qkv-bias /
+                 sliding-window per config)
+- ``attn_moe``   MoE decoder layer (expert-parallel, see moe.py)
+- ``hymba_mlp``  parallel attention + SSD heads (Hymba), then MLP
+- ``mlstm`` / ``slstm``  xLSTM blocks (no separate MLP)
+
+Homogeneous patterns (len == 1) stack layer parameters on a leading axis and
+run under ``lax.scan`` (compile-time O(1) in depth); heterogeneous patterns
+(xLSTM) use a python loop.  Every block is wrapped in ``jax.checkpoint`` for
+training memory.
+
+Decode state is a dict of stacked-per-layer arrays so it threads through the
+same scan.  VLM/audio frontends are embedding stubs + a trainable projector
+(the one allowed stub, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import attention_any, decode_attention
+from repro.models.common import (
+    apply_rope,
+    dense_init,
+    dtype_of,
+    embed_init,
+    head_rms_norm,
+    partition_tree,
+    rms_norm,
+)
+from repro.models.mlp import apply_mlp, init_mlp
+
+PyTree = Any
+
+FRONTEND_DIM = 1024  # stub embedding width (ViT/EnCodec feature dim)
+
+
+# ===========================================================================
+# per-component init
+# ===========================================================================
+def init_attn(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.q_dim), dtype),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), dtype),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, d), dtype,
+                         scale=1.0 / math.sqrt(cfg.q_dim * 2 * cfg.num_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def init_block(key, cfg, block: str, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if block in ("attn_mlp", "attn_moe", "hymba_mlp"):
+        p["attn"] = init_attn(ks[0], cfg, dtype)
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if block == "hymba_mlp":
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg, dtype)
+    if block in ("attn_mlp", "hymba_mlp"):
+        p["mlp"] = init_mlp(ks[2], cfg, dtype)
+    if block == "attn_moe":
+        p["moe"] = moe_lib.init_moe(ks[2], cfg, dtype)
+    if block == "mlstm":
+        p["mlstm"] = xlstm_lib.init_mlstm(ks[0], cfg, dtype)
+    if block == "slstm":
+        p["slstm"] = xlstm_lib.init_slstm(ks[0], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg) -> PyTree:
+    dtype = dtype_of(cfg)
+    k_embed, k_stack, k_head, k_front = jax.random.split(key, 4)
+    params: dict = {"embed": {"w": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype)},
+                    "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype)}
+    if cfg.frontend:
+        params["frontend"] = {"proj": dense_init(k_front, (FRONTEND_DIM, cfg.d_model), dtype)}
+
+    pattern = cfg.block_pattern
+    if len(pattern) == 1:
+        keys = jax.random.split(k_stack, cfg.num_layers)
+        params["stack"] = jax.vmap(
+            lambda k: init_block(k, cfg, pattern[0], dtype))(keys)
+    else:
+        keys = jax.random.split(k_stack, cfg.num_layers)
+        params["layers"] = [
+            init_block(keys[i], cfg, pattern[i % len(pattern)], dtype)
+            for i in range(cfg.num_layers)
+        ]
+    return params
+
+
+# ===========================================================================
+# block application
+# ===========================================================================
+def apply_attn(p, x, cfg, positions, *, window, cache=None, cur_pos=None,
+               mesh=None, batch_axes=("data",)):
+    """cache: dict(k, v, pos) for decode; returns (y, new_kv or kv-for-prefill)."""
+    B, S, d = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    # §Perf O1: pin head-major sharding so GSPMD never reshards k/v inside
+    # the flash chunk loops.  q-heads shard over "model" when divisible; k/v
+    # are repeated to H heads and inherit q's sharding (their params are
+    # replicated under this layout, see partition_rules).
+    if cache is None and cfg.opt_attn_head_shard and mesh is not None:
+        from jax.sharding import PartitionSpec as _P
+        bd = tuple(batch_axes) or None
+        shardable = cfg.num_heads % mesh.shape["model"] == 0
+        hspec = _P(bd, None, "model" if shardable else None, None)
+        G = cfg.num_heads // cfg.num_kv_heads
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        q = jax.lax.with_sharding_constraint(q, hspec)
+        k = jax.lax.with_sharding_constraint(k, hspec)
+        v = jax.lax.with_sharding_constraint(v, hspec)
+
+    if cache is None:  # train / prefill
+        o = attention_any(q, k, v, causal=True, window=window,
+                          window_slice=cfg.opt_window_slice)
+        new_kv = (k, v)
+    else:  # decode: S == 1
+        smax = cache["k"].shape[1]
+        slot = jnp.mod(cur_pos, smax)
+        k_cache = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, 1)
+        v_cache = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, 1)
+        pos_arr = jax.lax.dynamic_update_index_in_dim(
+            cache["pos"], jnp.asarray(cur_pos, cache["pos"].dtype), slot, 0)
+        o = decode_attention(q, k_cache, v_cache, pos_arr, cur_pos, window=window)
+        new_kv = {"k": k_cache, "v": v_cache, "pos": pos_arr}
+    y = o.reshape(B, S, cfg.q_dim) @ p["wo"]
+    return y, new_kv
+
+
+def apply_block(p, x, cfg, block: str, positions, *, mesh=None, batch_axes=("data",),
+                fsdp_axes=("data",), cache=None, cur_pos=None):
+    """Returns (x, aux_loss, new_cache)."""
+    rs = cfg.residual_scale
+    aux = jnp.float32(0.0)
+    new_cache: dict = {}
+    window = cfg.sliding_window
+
+    if block in ("attn_mlp", "attn_moe", "hymba_mlp"):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        attn_out, kv = apply_attn(p["attn"], h, cfg, positions, window=window,
+                                  cache=None if cache is None else cache["attn"],
+                                  cur_pos=cur_pos, mesh=mesh,
+                                  batch_axes=batch_axes)
+        if block == "hymba_mlp":
+            if cache is None:
+                ssm_out = ssm_lib.apply_ssm(p["ssm"], h, cfg)
+            else:
+                st = ssm_lib.SSMState(h=cache["ssm_h"], conv=cache["ssm_conv"])
+                ssm_out, new_st = ssm_lib.apply_ssm(p["ssm"], h, cfg, state=st)
+                new_cache["ssm_h"], new_cache["ssm_conv"] = new_st.h, new_st.conv
+            mix = 0.5 * (attn_out + ssm_out)
+        else:
+            mix = attn_out
+        if cache is not None:
+            new_cache["attn"] = kv
+        x = x + rs * mix
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if block == "attn_moe":
+            ff, aux = moe_lib.apply_moe(p["moe"], h2, cfg, mesh=mesh,
+                                        batch_axes=batch_axes,
+                                        fsdp_axes=fsdp_axes)
+        else:
+            ff = apply_mlp(p["mlp"], h2, cfg)
+        x = x + rs * ff
+        return x, aux, (new_cache if cache is not None else kv)
+
+    if block == "mlstm":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if cache is None:
+            out = xlstm_lib.apply_mlstm(p["mlstm"], h, cfg)
+        else:
+            st = xlstm_lib.MLSTMState(c=cache["mlstm_c"], n=cache["mlstm_n"],
+                                      m=cache["mlstm_m"])
+            out, new_st = xlstm_lib.apply_mlstm(p["mlstm"], h, cfg, state=st)
+            new_cache = {"mlstm_c": new_st.c, "mlstm_n": new_st.n,
+                         "mlstm_m": new_st.m}
+        return x + rs * out, aux, new_cache
+
+    if block == "slstm":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if cache is None:
+            out = xlstm_lib.apply_slstm(p["slstm"], h, cfg)
+        else:
+            st = xlstm_lib.SLSTMState(c=cache["slstm_c"], n=cache["slstm_n"],
+                                      m=cache["slstm_m"], h=cache["slstm_h"])
+            out, new_st = xlstm_lib.apply_slstm(p["slstm"], h, cfg, state=st)
+            new_cache = {"slstm_c": new_st.c, "slstm_n": new_st.n,
+                         "slstm_m": new_st.m, "slstm_h": new_st.h}
+        return x + rs * out, aux, new_cache
+
+    raise ValueError(f"unknown block {block!r}")
+
+
+# ===========================================================================
+# the Model
+# ===========================================================================
+class Model:
+    """Config-driven decoder.  Methods are pure; jit at the call site."""
+
+    def __init__(self, cfg, mesh=None, batch_axes=("data",),
+                 fsdp_axes=("data",), remat: bool = True):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch_axes = tuple(batch_axes)
+        self.fsdp_axes = tuple(fsdp_axes)
+        self.remat = remat
+
+    # -- embedding ------------------------------------------------------------
+    def embed(self, params, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (x (B,S,d), positions (B,S) or (S,))."""
+        cfg = self.cfg
+        parts = []
+        if cfg.frontend:
+            fe = batch["frontend"]  # (B, N, FRONTEND_DIM) stub embeddings
+            parts.append((fe @ params["frontend"]["proj"]).astype(dtype_of(cfg)))
+        if "tokens" in batch:
+            tok = batch["tokens"]
+            parts.append(jnp.take(params["embed"]["w"], tok, axis=0))
+        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+        positions = jnp.arange(x.shape[1])
+        return x, positions
+
+    def unembed(self, params, x) -> jnp.ndarray:
+        cfg = self.cfg
+        w = (params["embed"]["w"].T if cfg.tie_embeddings
+             else params["lm_head"]["w"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x @ w
+
+    # -- forward over layers ----------------------------------------------------
+    def forward(self, params, batch, want_kv: bool = False):
+        """Train/prefill forward. Returns (logits, aux, kv-stack or None)."""
+        cfg = self.cfg
+        x, positions = self.embed(params, batch)
+
+        def block_fn(p, x, block):
+            return apply_block(p, x, cfg, block, positions, mesh=self.mesh,
+                               batch_axes=self.batch_axes,
+                               fsdp_axes=self.fsdp_axes)
+
+        if self.remat:
+            block_fn = jax.checkpoint(block_fn, static_argnums=(2,),
+                                      policy=jax.checkpoint_policies.nothing_saveable)
+
+        aux_total = jnp.float32(0.0)
+        kvs = None
+        if "stack" in params and cfg.opt_unroll_layers:
+            # §Perf: unrolled layers — each FSDP all-gather is a per-layer
+            # slice instead of a full-stack gather inside the scan
+            kvs = []
+            for i in range(cfg.num_layers):
+                layer_p = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                                 params["stack"])
+                x, a, kv = block_fn(layer_p, x, cfg.block_pattern[0])
+                aux_total = aux_total + a
+                kvs.append(kv if want_kv else None)
+            kvs = None if not want_kv else jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *kvs)
+        elif "stack" in params:
+            block = cfg.block_pattern[0]
+
+            def scan_body(carry, layer_p):
+                x, aux = carry
+                x, a, kv = block_fn(layer_p, x, block)
+                return (x, aux + a), (kv if want_kv else None)
+
+            (x, aux_total), kvs = jax.lax.scan(scan_body, (x, aux_total),
+                                               params["stack"])
+        else:
+            kvs = []
+            for i, layer_p in enumerate(params["layers"]):
+                block = cfg.block_pattern[i % len(cfg.block_pattern)]
+                x, a, kv = block_fn(layer_p, x, block)
+                aux_total = aux_total + a
+                kvs.append(kv if want_kv else None)
+        logits = self.unembed(params, x)
+        return logits, aux_total / cfg.num_layers, kvs
+
+    # -- decode -------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int, prefill_len: int = 0):
+        """Decode cache, stacked per layer (scan-compatible)."""
+        cfg = self.cfg
+        dtype = dtype_of(cfg)
+        L = cfg.num_layers
+        window = cfg.sliding_window
+        smax = min(max_seq, window) if window else max_seq
+
+        def attn_entry():
+            pos = jnp.where(jnp.arange(smax) < prefill_len,
+                            jnp.arange(smax), -1).astype(jnp.int32)
+            return {
+                "k": jnp.zeros((batch_size, smax, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch_size, smax, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "pos": pos,
+            }
+
+        def entry_for(block):
+            e: dict = {}
+            if block in ("attn_mlp", "attn_moe", "hymba_mlp"):
+                e["attn"] = attn_entry()
+            if block == "hymba_mlp":
+                st = ssm_lib.init_ssm_state(cfg, batch_size, dtype)
+                e["ssm_h"], e["ssm_conv"] = st.h, st.conv
+            if block == "mlstm":
+                st = xlstm_lib.init_mlstm_state(cfg, batch_size)
+                e.update(mlstm_c=st.c, mlstm_n=st.n, mlstm_m=st.m)
+            if block == "slstm":
+                st = xlstm_lib.init_slstm_state(cfg, batch_size)
+                e.update(slstm_c=st.c, slstm_n=st.n, slstm_m=st.m, slstm_h=st.h)
+            return e
+
+        if len(cfg.block_pattern) == 1:
+            one = entry_for(cfg.block_pattern[0])
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one)
+        return [entry_for(cfg.block_pattern[i % len(cfg.block_pattern)])
+                for i in range(L)]
+
+    def serve_step(self, params, cache, tokens, cur_pos):
+        """One decode step. tokens: (B, 1) int32; cur_pos: scalar int32.
+
+        Returns (logits (B, 1, V), new_cache).
+        """
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)  # (B, 1, d)
+        positions = jnp.asarray(cur_pos)[None]
+
+        def block_fn(p, x, block, c):
+            return apply_block(p, x, cfg, block, positions, mesh=self.mesh,
+                               batch_axes=self.batch_axes,
+                               fsdp_axes=self.fsdp_axes, cache=c,
+                               cur_pos=cur_pos)
+
+        if "stack" in params:
+            block = cfg.block_pattern[0]
+
+            def scan_body(x, inp):
+                layer_p, c = inp
+                x, _, new_c = block_fn(layer_p, x, block, c)
+                return x, new_c
+
+            x, new_cache = jax.lax.scan(scan_body, x, (params["stack"], cache))
+        else:
+            new_cache = []
+            for i, layer_p in enumerate(params["layers"]):
+                block = cfg.block_pattern[i % len(cfg.block_pattern)]
+                x, _, c = block_fn(layer_p, x, block, cache[i])
+                new_cache.append(c)
+        logits = self.unembed(params, x)
+        return logits, new_cache
+
+    def prefill(self, params, batch):
+        """Full-prompt forward; returns (last-token logits, attn cache).
+
+        For attention architectures the per-layer (k, v) from the forward pass
+        become the decode cache (trimmed to the sliding window if set).  For
+        SSM/hybrid/xLSTM blocks the recurrent state is rebuilt by the decode
+        path itself (examples use ``init_cache`` + replay); the prefill SHAPE
+        in the dry-run lowers this forward pass, which is the expensive part.
+        """
+        cfg = self.cfg
+        logits, _, kvs = self.forward(params, batch, want_kv=True)
+        window = cfg.sliding_window
+        if "stack" in params and cfg.block_pattern[0] in ("attn_mlp", "attn_moe"):
+            k, v = kvs  # (L, B, S, KV, hd) each
+            S = k.shape[2]
+            if window and S > window:
+                k, v = k[:, :, -window:], v[:, :, -window:]
+                pos = jnp.arange(S - window, S, dtype=jnp.int32)
+            else:
+                pos = jnp.arange(S, dtype=jnp.int32)
+            return logits[:, -1:], {"attn": {"k": k, "v": v, "pos": pos}}
+        return logits[:, -1:], None
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+def loss_fn(model: Model, params, batch) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross-entropy (+ MoE aux).  batch carries 'tokens' (B, S+1)
+    and optionally 'frontend'; loss is computed on token positions only."""
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    inp = dict(batch)
+    inp["tokens"] = tokens[:, :-1]
+    logits, aux, _ = model.forward(params, inp)
+    labels = tokens[:, 1:]
+    n_text = labels.shape[1]
+    logits_text = logits[:, -n_text:]  # skip frontend positions
+    logp = jax.nn.log_softmax(logits_text.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = -jnp.mean(ll)
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+partition_tree = partition_tree  # re-export for repro.models namespace

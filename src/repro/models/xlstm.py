@@ -1,0 +1,240 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential) [arXiv:2405.04517].
+
+HARDWARE ADAPTATION: the mLSTM recurrence C_t = f_t C_{t-1} + i_t k_t v_t^T
+is computed chunkwise (linear-attention duality) so the inner work is MXU
+matmuls and only the cross-chunk carry is sequential — same pattern as the
+SSD scan in ssm.py.  Exponential gating is stabilized in log space with a
+carried max-state m, following the paper's Appendix formulation.  sLSTM is
+inherently sequential (its recurrent weights feed h_{t-1} through a dense
+matrix) and runs as a lax.scan over time; xLSTM[7:1] keeps only 1-in-8
+layers sLSTM, so the sequential fraction is small.
+
+mLSTM state per head: C (dk, dv), n (dk,), m scalar.
+sLSTM state per unit: c, n, m, h.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = 2 * d                      # pre-up-projection factor 2
+    H = cfg.num_heads
+    dk = di // H
+    ks = jax.random.split(key, 8)
+    def headmat(k):  # block-diagonal per-head proj (paper's param budget)
+        return (jax.random.normal(k, (H, dk, dk), jnp.float32)
+                / math.sqrt(dk)).astype(dtype)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),     # x and gate z
+        # separate q/k/v head-mats: fused (dk,3dk) would be resharded by
+        # GSPMD at the split point (§Perf pair-4 lesson)
+        "wq": headmat(ks[1]),
+        "wk": headmat(ks[6]),
+        "wv": headmat(ks[7]),
+        "gates": dense_init(ks[2], (di, 2 * H), dtype),       # i~, f~ per head
+        "gates_b": jnp.concatenate([
+            jnp.zeros((H,), jnp.float32),                     # input gate bias
+            jnp.linspace(3.0, 6.0, H),                        # forget bias (high)
+        ]).astype(jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], (di, d), dtype),
+        "skip": jnp.ones((di,), jnp.float32),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, H, dk, dv) fp32
+    n: jnp.ndarray  # (B, H, dk) fp32
+    m: jnp.ndarray  # (B, H) fp32 stabilizer
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    di = 2 * cfg.d_model
+    H = cfg.num_heads
+    dk = di // H
+    return MLSTMState(
+        c=jnp.zeros((batch, H, dk, dk), jnp.float32),
+        n=jnp.zeros((batch, H, dk), jnp.float32),
+        m=jnp.full((batch, H), 0.0, jnp.float32),
+    )
+
+
+def _mlstm_chunk(q, k, v, lf, li, chunk: int, state: MLSTMState):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: (B, S, H, dk) fp32; lf: (B, S, H) log forget gate (logsigmoid);
+    li: (B, S, H) input gate pre-activation (log space).
+    Returns y: (B, S, H, dk) and final MLSTMState.
+    """
+    B, S, H, dk = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+
+    qc = q.reshape(B, nc, c, H, dk).swapaxes(0, 1)
+    kc = k.reshape(B, nc, c, H, dk).swapaxes(0, 1)
+    vc = v.reshape(B, nc, c, H, dk).swapaxes(0, 1)
+    lfc = lf.reshape(B, nc, c, H).swapaxes(0, 1)
+    lic = li.reshape(B, nc, c, H).swapaxes(0, 1)
+
+    def step(carry, inp):
+        C, n, m = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+        qb, kb, vb, lfb, lib = inp
+        seg = jnp.cumsum(lfb, axis=1)                      # (B, c, H)
+        # log weight of source s seen at target t: seg_t - seg_s + li_s
+        logw = seg[:, :, None, :] - seg[:, None, :, :] + lib[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        logw = jnp.where(tri[None, :, :, None], logw, NEG)  # (B,t,s,H)
+        # inter-chunk contribution enters with log weight seg_t + m
+        log_inter = seg + m[:, None, :]                    # (B, c, H)
+        m_intra = jnp.max(logw, axis=2)                    # (B, c, H)
+        m_t = jnp.maximum(m_intra, log_inter)              # stabilizer per t
+        w = jnp.exp(logw - m_t[:, :, None, :])             # (B,t,s,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) / math.sqrt(dk)
+        num_intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, vb)
+        den_intra = jnp.einsum("btsh,btsh->bth", scores, w)
+        inter_scale = jnp.exp(log_inter - m_t)             # (B, c, H)
+        num_inter = jnp.einsum("bthd,bhde,bth->bthe", qb, C, inter_scale) / math.sqrt(dk)
+        den_inter = jnp.einsum("bthd,bhd,bth->bth", qb, n, inter_scale) / math.sqrt(dk)
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to chunk end
+        seg_end = seg[:, -1, :]                            # (B, H)
+        m_new = jnp.maximum(seg_end + m, jnp.max(seg_end[:, None, :] - seg + lib, axis=1))
+        w_end = jnp.exp(seg_end[:, None, :] - seg + lib - m_new[:, None, :])  # (B,c,H)
+        carry_scale = jnp.exp(seg_end + m - m_new)         # (B, H)
+        C_new = (carry_scale[:, :, None, None] * C
+                 + jnp.einsum("bch,bchd,bche->bhde", w_end, kb, vb))
+        n_new = carry_scale[:, :, None] * n + jnp.einsum("bch,bchd->bhd", w_end, kb)
+        return (C_new, n_new, m_new), y
+
+    (C, n, m), yc = jax.lax.scan(step, (state.c, state.n, state.m),
+                                 (qc, kc, vc, lfc, lic))
+    y = yc.swapaxes(0, 1).reshape(B, S, H, dk)
+    return y, MLSTMState(c=C, n=n, m=m)
+
+
+def apply_mlstm(params, x, cfg, *, chunk: int = 64, state: MLSTMState | None = None):
+    """x: (B, S, d) -> (B, S, d) [, new state when decoding]."""
+    B, S, d = x.shape
+    di = 2 * d
+    H = cfg.num_heads
+    dk = di // H
+
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xh = xi.reshape(B, S, H, dk)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bshd,hde->bshe", xh, params["wv"]).astype(jnp.float32)
+    gates = (xi @ params["gates"]).astype(jnp.float32) + params["gates_b"]
+    li, lf_pre = jnp.split(gates, 2, axis=-1)  # (B, S, H) each
+    lf = jax.nn.log_sigmoid(lf_pre)
+
+    st = state if state is not None else init_mlstm_state(cfg, B)
+    y, new_state = _mlstm_chunk(q, k, v, lf, li, chunk if state is None else 1, st)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y + params["skip"].astype(x.dtype) * xi
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if state is None:
+        return out
+    return out, new_state
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    f = int(d * 4 / 3)
+    ks = jax.random.split(key, 5)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * d), dtype),
+        "wr": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+               / math.sqrt(dh)).astype(dtype),
+        "bias": jnp.concatenate([
+            jnp.zeros((d,), jnp.float32),          # i
+            jnp.linspace(3.0, 6.0, d),             # f (high forget bias)
+            jnp.zeros((2 * d,), jnp.float32),      # z, o
+        ]),
+        "ffn_up": dense_init(ks[2], (d, 2 * f), dtype),
+        "ffn_down": dense_init(ks[3], (f, d), dtype),
+        "norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, d)
+    n: jnp.ndarray  # (B, d)
+    m: jnp.ndarray  # (B, d)
+    h: jnp.ndarray  # (B, d)
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, m=z, h=z)
+
+
+def _slstm_cell(params, cfg, xt, st: SLSTMState) -> tuple[SLSTMState, jnp.ndarray]:
+    """One timestep. xt: (B, d) pre-projected gate inputs (B, 4d)."""
+    B = xt.shape[0]
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    hr = st.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, params["wr"].astype(jnp.float32))
+    rec = rec.reshape(B, 4 * d)
+    # interleave per head: rec gives (4*dh per head) -> reorder to gate-major
+    rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    pre = xt.astype(jnp.float32) + rec + params["bias"]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_pre + st.m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + st.m - m_new)
+    z_g = jnp.tanh(z_pre)
+    o_g = jax.nn.sigmoid(o_pre)
+    c_new = f_g * st.c + i_g * z_g
+    n_new = f_g * st.n + i_g
+    h_new = o_g * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, m=m_new, h=h_new), h_new
+
+
+def apply_slstm(params, x, cfg, *, state: SLSTMState | None = None):
+    """x: (B, S, d) -> (B, S, d) [, new state when decoding]."""
+    B, S, d = x.shape
+    xg = x @ params["wx"]  # (B, S, 4d)
+    st = state if state is not None else init_slstm_state(cfg, B)
+
+    def step(s, xt):
+        s, h = _slstm_cell(params, cfg, xt, s)
+        return s, h
+
+    new_state, hs = jax.lax.scan(step, st, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)  # (B, S, d)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    up = y @ params["ffn_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ params["ffn_down"]
+    if state is None:
+        return out
+    return out, new_state

@@ -1,0 +1,1 @@
+from repro.train.loop import make_grad_fn, make_train_step, train_loop  # noqa: F401

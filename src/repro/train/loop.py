@@ -1,0 +1,93 @@
+"""Training loop: microbatched gradients + async-SGLD update.
+
+``make_grad_fn`` builds the gradient oracle the SGLD sampler consumes:
+value_and_grad of the model loss, with optional gradient accumulation over
+microbatches (lax.scan) so the big shapes fit HBM.  ``make_train_step``
+wires it into the paper's sampler (any mode: sync / consistent /
+inconsistent / pipeline), and ``train_loop`` is the host-side driver used by
+the examples and the end-to-end driver.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sgld import SGLDConfig, SGLDSampler
+from repro.models.transformer import Model, loss_fn
+from repro.utils import tree_add_scaled, tree_scale, tree_zeros_like
+
+PyTree = Any
+
+
+def _split_microbatch(batch: PyTree, n: int) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_grad_fn(model: Model, num_microbatches: int = 1):
+    """grad_fn(params, batch) -> (grads, metrics) for the SGLD sampler."""
+
+    def single(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+        metrics = dict(metrics, loss=loss)
+        return grads, metrics
+
+    if num_microbatches <= 1:
+        return single
+
+    def accumulated(params, batch):
+        micro = _split_microbatch(batch, num_microbatches)
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            g, m = single(params, mb)
+            g_acc = tree_add_scaled(g_acc, g, 1.0 / num_microbatches)
+            m_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b / num_microbatches, m_acc, m)
+            return (g_acc, m_acc), None
+
+        g0 = tree_zeros_like(params)
+        m0 = {"ce": jnp.float32(0), "aux": jnp.float32(0), "loss": jnp.float32(0)}
+        (grads, metrics), _ = jax.lax.scan(body, (g0, m0), micro)
+        return grads, metrics
+
+    return accumulated
+
+
+def make_train_step(model: Model, sgld_cfg: SGLDConfig, num_microbatches: int = 1):
+    """Returns (sampler, step_fn); step_fn(state, batch, delay) -> (state, metrics)."""
+    grad_fn = make_grad_fn(model, num_microbatches)
+    sampler = SGLDSampler(sgld_cfg, grad_fn, has_aux=True)
+
+    def step_fn(state, batch, delay=0):
+        return sampler.step(state, batch, delay)
+
+    return sampler, step_fn
+
+
+def train_loop(model: Model, params: PyTree, sgld_cfg: SGLDConfig,
+               batch_fn: Callable[[jax.Array], PyTree], steps: int,
+               key: jax.Array, delays=None, log_every: int = 10,
+               log_fn=print):
+    """Host driver: jitted step, host-side batches/delays, simple logging."""
+    sampler, step_fn = make_train_step(model, sgld_cfg)
+    state = sampler.init(params, key)
+    jstep = jax.jit(step_fn)
+    t0 = time.time()
+    history = []
+    for k in range(steps):
+        key, bk = jax.random.split(key)
+        batch = batch_fn(bk)
+        d = int(delays[k]) if delays is not None else 0
+        state, metrics = jstep(state, batch, d)
+        if k % log_every == 0 or k == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((k, loss))
+            log_fn(f"step {k:5d} loss {loss:8.4f} "
+                   f"({time.time() - t0:6.1f}s)")
+    return state, history

@@ -1,0 +1,95 @@
+"""Small shared utilities: pytree helpers, key handling, shape math."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_keys(key: jax.Array, tree: PyTree) -> PyTree:
+    """Split `key` into one independent key per leaf of `tree`."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def tree_normal_like(key: jax.Array, tree: PyTree, dtype=None) -> PyTree:
+    """A pytree of iid standard normals shaped like `tree`."""
+    keytree = tree_keys(key, tree)
+    return jax.tree_util.tree_map(
+        lambda k, x: jax.random.normal(k, jnp.shape(x), dtype or jnp.result_type(x)),
+        keytree,
+        tree,
+    )
+
+
+def tree_add_scaled(a: PyTree, b: PyTree, scale) -> PyTree:
+    """a + scale * b, leafwise."""
+    return jax.tree_util.tree_map(lambda x, y: x + scale * y, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a: PyTree, scale) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: scale * x, a)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    parts = jax.tree_util.tree_map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_sq_norm(a: PyTree) -> jax.Array:
+    return tree_dot(a, a)
+
+
+def tree_size(a: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_ravel(a: PyTree) -> jax.Array:
+    """Flatten a pytree into a single 1-D vector (float32)."""
+    leaves = jax.tree_util.tree_leaves(a)
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.3g}{unit}"
+        n /= 1000.0
+    return f"{n:.3g}Q"
+
+
+def gaussian_log_density(x: jax.Array, mean: jax.Array, cov_diag: jax.Array) -> jax.Array:
+    d = x.shape[-1]
+    quad = jnp.sum((x - mean) ** 2 / cov_diag, axis=-1)
+    logdet = jnp.sum(jnp.log(cov_diag))
+    return -0.5 * (quad + logdet + d * math.log(2.0 * math.pi))

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: no xla_force_host_platform_device_count here — unit/smoke tests see
+# the real single CPU device.  Sharding tests spawn subprocesses that set it.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,79 @@
+"""Ring buffer + delay process properties (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    RingBuffer,
+    WorkerModel,
+    constant_delays,
+    init_ring,
+    push,
+    read_consistent,
+    read_inconsistent,
+    sample_coordinate_delays,
+    simulate_async,
+    simulate_sync,
+    speedup_vs_sync,
+)
+
+
+def test_ring_push_and_consistent_read():
+    params = {"w": jnp.zeros((3,))}
+    ring = init_ring(params, tau=3)
+    for k in range(1, 7):
+        ring = push(ring, {"w": jnp.full((3,), float(k))})
+    # delay 0 -> most recent (6); delay 2 -> 4
+    assert float(read_consistent(ring, 0)["w"][0]) == 6.0
+    assert float(read_consistent(ring, 2)["w"][0]) == 4.0
+    assert float(read_consistent(ring, 3)["w"][0]) == 3.0
+    # clamped beyond depth
+    assert float(read_consistent(ring, 99)["w"][0]) == 3.0
+
+
+@given(tau=st.integers(1, 6), delay=st.integers(0, 6), d=st.integers(1, 40))
+@settings(max_examples=20, deadline=None)
+def test_inconsistent_read_bounds(tau, delay, d):
+    """Every coordinate of the W-Icon read equals SOME snapshot value in the
+    admissible window [k-tau, k] (Assumption 2.3)."""
+    params = {"w": jnp.zeros((d,))}
+    ring = init_ring(params, tau=tau)
+    vals = []
+    for k in range(1, tau + 2):
+        ring = push(ring, {"w": jnp.full((d,), float(k))})
+        vals.append(float(k))
+    delays = sample_coordinate_delays(jax.random.PRNGKey(0), ring,
+                                      jnp.int32(delay))
+    x_hat = read_inconsistent(ring, delays)["w"]
+    eff = min(delay, tau)
+    admissible = set(vals[-(eff + 1):])
+    assert set(np.asarray(x_hat).tolist()) <= admissible
+
+
+def test_async_delays_statistics():
+    wm = WorkerModel(num_workers=8, seed=0)
+    tr = simulate_async(wm, 4000, seed=0)
+    # staleness ~= P-1 on average in steady state
+    assert 4.0 < tr.mean_delay < 12.0
+    assert tr.delays.min() >= 0
+    assert np.all(np.diff(tr.commit_times) >= 0)
+    # deterministic given the seed
+    tr2 = simulate_async(WorkerModel(num_workers=8, seed=0), 4000, seed=0)
+    np.testing.assert_array_equal(tr.delays, tr2.delays)
+
+
+def test_sync_trace_no_delay_and_slower_rounds():
+    wm = WorkerModel(num_workers=16, seed=1)
+    ts = simulate_sync(wm, 100, seed=1)
+    ta = simulate_async(wm, 1600, seed=1)
+    assert ts.delays.max() == 0
+    sp = speedup_vs_sync(ta, ts)
+    assert sp > 1.0, f"async must beat barrier execution, got {sp}"
+
+
+def test_constant_delay_warmup():
+    tr = constant_delays(5, 100)
+    assert tr.delays[0] == 0 and tr.delays[10] == 5
+    assert tr.max_delay == 5

@@ -1,0 +1,81 @@
+"""W2 / KL estimator correctness against closed forms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.metrics import (
+    gaussian_kl,
+    gaussian_w2,
+    kl_samples_to_gaussian,
+    knn_kl_estimate,
+    sinkhorn_w2,
+    w2_empirical_1d,
+    w2_to_gaussian,
+)
+
+
+def test_gaussian_w2_identities():
+    mu = jnp.zeros(3)
+    cov = jnp.eye(3)
+    assert float(gaussian_w2(mu, cov, mu, cov)) < 1e-5
+    # pure translation: W2 = ||shift||
+    shift = jnp.array([3.0, 4.0, 0.0])
+    np.testing.assert_allclose(float(gaussian_w2(mu + shift, cov, mu, cov)),
+                               5.0, rtol=1e-5)
+    # isotropic scale: W2^2 = d (s1 - s2)^2
+    np.testing.assert_allclose(
+        float(gaussian_w2(mu, 4.0 * cov, mu, cov)), np.sqrt(3.0), rtol=1e-5)
+
+
+@given(shift=st.floats(-3, 3), scale=st.floats(0.5, 2.0))
+@settings(max_examples=10, deadline=None)
+def test_w2_1d_gaussian_quantile(shift, scale):
+    """1-D W2 between N(0,1) and N(shift, scale^2):
+    W2^2 = shift^2 + (scale-1)^2."""
+    x = np.random.default_rng(0).normal(size=20000)
+    y = shift + scale * np.random.default_rng(1).normal(size=20000)
+    got = float(w2_empirical_1d(jnp.asarray(x), jnp.asarray(y)))
+    want = np.sqrt(shift**2 + (scale - 1.0) ** 2)
+    assert abs(got - want) < 0.05 + 0.05 * want
+
+
+def test_sinkhorn_matches_gaussian_closed_form():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (500, 2))
+    y = jax.random.normal(jax.random.PRNGKey(1), (500, 2)) + jnp.array([2.0, 0.0])
+    got = float(sinkhorn_w2(x, y, eps=0.05))
+    assert abs(got - 2.0) < 0.15
+
+
+def test_w2_to_gaussian_moment_matched():
+    key = jax.random.PRNGKey(2)
+    samples = 2.0 + 0.5 * jax.random.normal(key, (4000, 3))
+    d = float(w2_to_gaussian(samples, jnp.full(3, 2.0), 0.25 * jnp.eye(3)))
+    assert d < 0.1
+
+
+def test_gaussian_kl_identities():
+    mu, cov = jnp.zeros(2), jnp.eye(2)
+    assert float(gaussian_kl(mu, cov, mu, cov)) < 1e-6
+    # KL(N(m,I)||N(0,I)) = ||m||^2/2
+    np.testing.assert_allclose(
+        float(gaussian_kl(mu + 1.0, cov, mu, cov)), 1.0, rtol=1e-5)
+
+
+def test_kl_samples_to_gaussian():
+    key = jax.random.PRNGKey(3)
+    samples = jax.random.normal(key, (5000, 2))
+    kl = float(kl_samples_to_gaussian(samples, jnp.zeros(2), jnp.eye(2)))
+    assert kl < 0.02
+
+
+def test_knn_kl_sanity():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (400, 2))
+    y = jax.random.normal(jax.random.PRNGKey(5), (400, 2))
+    z = jax.random.normal(jax.random.PRNGKey(6), (400, 2)) + 3.0
+    same = float(knn_kl_estimate(x, y))
+    diff = float(knn_kl_estimate(x, z))
+    assert diff > same + 1.0

@@ -1,0 +1,105 @@
+"""Roofline machinery: HLO collective parsing (loop-aware) and jaxpr cost."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.jaxpr_cost import Cost, jaxpr_cost, step_cost
+from repro.launch.roofline import (
+    _buffer_bytes,
+    collective_bytes,
+    model_flops,
+)
+
+
+def test_buffer_bytes():
+    assert _buffer_bytes("bf16[16,1024]{1,0}") == 16 * 1024 * 2
+    assert _buffer_bytes("(f32[8], f32[8])") == 64
+    assert _buffer_bytes("u32[]") == 0 or _buffer_bytes("u32[]") == 4  # scalar
+
+
+def test_collective_parse_flat():
+    hlo = """
+HloModule test
+
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16] parameter(0)
+  ROOT %ar = f32[16]{0} all-reduce(%p), replica_groups={}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 64
+
+
+def test_collective_parse_loop_aware():
+    hlo = """
+HloModule test
+
+%body (t: (s32[], f32[32])) -> (s32[], f32[32]) {
+  %t = (s32[], f32[32]) parameter(0)
+  %g = f32[32]{0} get-tuple-element(%t), index=1
+  %ar = f32[32]{0} all-reduce(%g), replica_groups={}
+  ROOT %out = (s32[], f32[32]) tuple(%g, %ar)
+}
+
+%cond (t: (s32[], f32[32])) -> pred[] {
+  %t = (s32[], f32[32]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (p: f32[32]) -> f32[32] {
+  %p = f32[32] parameter(0)
+  %init = (s32[], f32[32]) tuple(%p)
+  %w = (s32[], f32[32]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[32]{0} get-tuple-element(%w), index=1
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 10 * 32 * 4  # trip count x buffer
+
+
+def test_jaxpr_cost_exact_matmul():
+    def f(x, w):
+        return x @ w
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = step_cost(f, x, w)
+    assert c.flops == 2 * 64 * 128 * 32
+
+
+def test_jaxpr_cost_multiplies_scan():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = step_cost(f, x, w)
+    assert c.flops == 10 * 2 * 64 * 64 * 64
+
+
+def test_jaxpr_cost_grad_includes_backward():
+    def f(x, w):
+        return jnp.sum((x @ w) ** 2)
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    fwd = step_cost(f, x, w).flops
+    bwd = step_cost(jax.grad(f, argnums=(0, 1)), x, w).flops
+    assert bwd >= 2.5 * fwd  # fwd + 2 backward matmuls
+
+
+def test_model_flops_kinds():
+    from repro.configs import get_arch, get_shape
+    cfg = get_arch("qwen3-4b")
+    tr = model_flops(cfg, get_shape("train_4k"))
+    pf = model_flops(cfg, get_shape("prefill_32k"))
+    dc = model_flops(cfg, get_shape("decode_32k"))
+    assert tr == 6.0 * cfg.param_count() * 256 * 4096
+    assert pf == 2.0 * cfg.param_count() * 32 * 32768
+    assert dc == 2.0 * cfg.param_count() * 128

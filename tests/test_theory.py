@@ -1,0 +1,59 @@
+"""Corollary 2.1 constants: shape of the tau-dependence."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    ProblemConstants,
+    gamma_eps_kl,
+    gamma_eps_w2,
+    gamma_terms,
+    n_eps_kl,
+    n_eps_w2,
+)
+from repro.core.theory import inconsistent_read_bias
+
+
+def consts(tau):
+    return ProblemConstants(m=1.0, L=3.0, d=10, G=5.0, sigma=0.5, tau=tau,
+                            w2sq_0=4.0)
+
+
+def test_gamma_terms_positive():
+    g = gamma_terms(consts(4), eps=0.1)
+    assert all(v > 0 for v in g.values())
+
+
+def test_gamma_shrinks_with_tau():
+    eps = 0.1
+    gs = [gamma_eps_kl(consts(tau), eps) for tau in (0, 2, 8, 32)]
+    assert all(a >= b for a, b in zip(gs, gs[1:]))
+
+
+def test_n_eps_grows_polynomially_with_tau():
+    eps = 0.1
+    ns = [n_eps_kl(consts(tau), eps) for tau in (1, 4, 16)]
+    assert ns[0] < ns[1] < ns[2]
+    # tau enters gamma^1 as tau^2 -> n_eps growth is polynomial, not exp:
+    # going tau 4 -> 16 must grow less than (16/4)^4
+    assert ns[2] / ns[1] < (16 / 4) ** 4
+
+
+def test_n_eps_scales_with_inverse_eps():
+    n1 = n_eps_kl(consts(2), 0.1)
+    n2 = n_eps_kl(consts(2), 0.05)
+    assert n2 > 1.5 * n1  # at least ~1/eps^2-ish growth
+
+
+def test_w2_variant_tighter_stepsize():
+    c = consts(4)
+    assert gamma_eps_w2(c, 0.1) < gamma_eps_kl(c, 0.1)
+    assert n_eps_w2(c, 0.1) > 0
+
+
+def test_inconsistent_bias_scaling():
+    c = consts(8)
+    b1 = inconsistent_read_bias(c, 1e-3)
+    b2 = inconsistent_read_bias(consts(16), 1e-3)
+    assert b2 == pytest.approx(2 * b1)  # linear in tau
