@@ -1,0 +1,85 @@
+"""Engine scan-chunking vs the old per-step Python loop.
+
+Same sampler, same potential as the regression reproduction
+(``bench_regression``): the per-step loop pays one jit dispatch + host
+round-trip per commit, the Engine pays one per ``chunk`` commits.  Reports
+us/step for both and the speedup.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import samplers
+from repro.core import PolyRegression
+from repro.train.engine import Engine
+
+
+def _build(seed: int = 0, batch: int = 256, tau: int = 8):
+    reg = PolyRegression.make(jax.random.PRNGKey(seed), nu_std=0.1)
+
+    def grad(p, key):
+        return jax.grad(reg.value)(p, reg.sample_batch(key, batch))
+
+    sampler = samplers.sgld("consistent", grad, gamma=2e-4, sigma=1e-3,
+                            tau=tau)
+    return reg, sampler
+
+
+def _timed(fn, *args):
+    out = fn(*args)         # warm-up / compile
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    t0 = time.time()
+    out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    return out, time.time() - t0
+
+
+def run(steps: int = 2000, chunk: int = 200, seed: int = 0):
+    reg, sampler = _build(seed)
+    mu, _, _ = reg.posterior_moments(sigma=1e-3)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), steps)
+    delays = jnp.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed + 2), (steps,), 0, 8))
+
+    # old-style host loop: one jitted dispatch per step
+    jstep = jax.jit(sampler.step)
+
+    def python_loop():
+        state = sampler.init(mu + 1.0, jax.random.PRNGKey(seed + 3))
+        for k in range(steps):
+            state, _ = jstep(state, keys[k], delays[k])
+        return state.params
+
+    # unified Engine: lax.scan chunks, donated state
+    engine = Engine(sampler, chunk_size=chunk, collect_aux=False)
+
+    def engine_run():
+        state = sampler.init(mu + 1.0, jax.random.PRNGKey(seed + 3))
+        state, _ = engine.run(state, steps=steps, batches=keys, delays=delays)
+        return state.params
+
+    p_loop, t_loop = _timed(python_loop)
+    p_eng, t_eng = _timed(engine_run)
+    drift = float(jnp.abs(p_loop - p_eng).max())
+    return t_loop, t_eng, drift
+
+
+def main(fast: bool = True):
+    steps = 1000 if fast else 5000
+    t_loop, t_eng, drift = run(steps=steps, chunk=steps // 10)
+    return [{
+        "bench": "engine", "mode": "consistent", "steps": steps,
+        "us_per_call": t_eng / steps * 1e6,
+        "loop_us_per_call": round(t_loop / steps * 1e6, 1),
+        "speedup_vs_loop": round(t_loop / t_eng, 2),
+        "max_param_drift": drift,
+    }]
+
+
+if __name__ == "__main__":
+    for r in main(fast=True):
+        print(r)

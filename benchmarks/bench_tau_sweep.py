@@ -13,11 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import samplers
 from repro.core import (
     ProblemConstants,
     Quadratic,
-    SGLDConfig,
-    SGLDSampler,
     constant_delays,
     gamma_eps_kl,
     n_eps_kl,
@@ -35,9 +34,9 @@ def run(taus=(0, 1, 2, 4, 8, 16), n_chains=64, seed=0):
     rows = []
     for tau in taus:
         mode = "consistent" if tau > 0 else "sync"
-        cfg = SGLDConfig(mode=mode, gamma=GAMMA, sigma=SIGMA,
-                         tau=max(tau, 1) if tau > 0 else 0)
-        sampler = SGLDSampler(cfg, lambda p, b: quad.grad(p, b))
+        sampler = samplers.sgld(mode, lambda p, b: quad.grad(p, b),
+                                gamma=GAMMA, sigma=SIGMA,
+                                tau=max(tau, 1) if tau > 0 else 0)
         delays = jnp.asarray(constant_delays(tau, STEPS).delays) if tau \
             else jnp.zeros((STEPS,), jnp.int32)
         batches = jnp.zeros((STEPS, 1))

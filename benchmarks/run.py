@@ -12,6 +12,7 @@ import sys
 import time
 
 from benchmarks import (
+    bench_engine,
     bench_kernels,
     bench_regression,
     bench_rica,
@@ -26,6 +27,7 @@ BENCHES = {
     "speedup": bench_speedup.main,         # paper sub-figures (b)
     "tau_sweep": bench_tau_sweep.main,     # Corollary 2.1
     "kernels": bench_kernels.main,         # Pallas hot-path
+    "engine": bench_engine.main,           # scan-chunked Engine vs host loop
     "roofline": bench_roofline.main,       # §Roofline table (from dry-run)
 }
 

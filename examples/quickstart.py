@@ -3,20 +3,23 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Trains a reduced qwen3-style model for 30 steps with the W-Con (consistent
-stale read) sampler using delays from the virtual-worker simulator, then
-decodes a few tokens through the KV cache — the whole public API in ~60
-lines.
+stale read) sampler — built from the composable ``repro.samplers`` API and
+driven by the scan-chunked Engine — using delays from the virtual-worker
+simulator, then decodes a few tokens through the KV cache.  The whole
+public API in ~60 lines.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import samplers
 from repro.configs import ShapeConfig, get_reduced
-from repro.core import SGLDConfig, WorkerModel, simulate_async
+from repro.core import WorkerModel, simulate_async
 from repro.data import make_batch
 from repro.models.transformer import Model, init_params
-from repro.train.loop import make_train_step
+from repro.train import Engine, log_hook
+from repro.train.loop import make_grad_fn
 
 ARCH = "qwen3-4b"
 STEPS = 30
@@ -31,22 +34,21 @@ n = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
 print(f"{cfg.name}: {n/1e6:.1f}M params")
 
 # The paper's W-Con sampler: stale whole-vector reads with delays from the
-# event-driven virtual-worker model (8 asynchronous workers).
-sgld = SGLDConfig(mode="consistent", gamma=5e-4, sigma=1e-7, tau=4)
+# event-driven virtual-worker model (8 asynchronous workers).  The preset
+# expands to chain(delay_read(TraceDelay(4)), gradients(...),
+# langevin_noise(1e-7), apply_sgld_update()).
+sampler = samplers.sgld("consistent", make_grad_fn(model), gamma=5e-4,
+                        sigma=1e-7, tau=4, has_aux=True)
 trace = simulate_async(WorkerModel(num_workers=8, seed=0), STEPS, seed=0)
 delays = np.minimum(trace.delays, 4)
 print(f"simulated delays: mean {trace.mean_delay:.1f}, max {trace.max_delay}")
 
-sampler, step_fn = make_train_step(model, sgld)
-state = sampler.init(params, key)
-jstep = jax.jit(step_fn)
-for k in range(STEPS):
-    key, bk = jax.random.split(key)
-    batch = make_batch(cfg, shape, bk, "train")
-    state, metrics = jstep(state, batch, int(delays[k]))
-    if k % 5 == 0 or k == STEPS - 1:
-        print(f"step {k:3d}  loss {float(metrics['loss']):.4f}  "
-              f"delay {int(delays[k])}")
+key, init_key = jax.random.split(key)
+state = sampler.init(params, init_key)
+engine = Engine(sampler, batch_fn=lambda k: make_batch(cfg, shape, k, "train"),
+                chunk_size=5, hooks=[log_hook(every=5)])
+state, metrics = engine.run(state, steps=STEPS, delays=delays, key=key)
+print(f"final loss {float(metrics['loss'][-1]):.4f}")
 
 # decode a few tokens greedily from the sampled posterior weights
 tokens = jnp.zeros((1, 1), jnp.int32)

@@ -18,7 +18,7 @@ from repro.configs import ShapeConfig, get_reduced
 from repro.core import SGLDConfig
 from repro.data import make_batch
 from repro.models.transformer import Model, init_params
-from repro.train.loop import make_train_step
+from repro.train import Engine, make_train_step
 
 
 def main():
@@ -40,14 +40,16 @@ def main():
 
     # a few SGLD steps so the served weights are a posterior sample
     shape = ShapeConfig("warm", seq_len=64, global_batch=2, kind="train")
-    sampler, step_fn = make_train_step(
+    sampler, _ = make_train_step(
         model, SGLDConfig(mode="pipeline", gamma=1e-3, sigma=1e-8))
-    state = sampler.init(params, key)
-    jstep = jax.jit(step_fn)
-    for _ in range(args.warm_steps):
-        key, bk = jax.random.split(key)
-        state, _ = jstep(state, make_batch(cfg, shape, bk, "train"), 0)
-    params = state.params
+    if args.warm_steps > 0:
+        key, init_key = jax.random.split(key)
+        state = sampler.init(params, init_key)
+        engine = Engine(sampler,
+                        batch_fn=lambda k: make_batch(cfg, shape, k, "train"),
+                        chunk_size=args.warm_steps)
+        state, _ = engine.run(state, steps=args.warm_steps, key=key)
+        params = state.params
 
     # prefill
     key, pk = jax.random.split(key)

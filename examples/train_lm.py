@@ -21,7 +21,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import SGLDConfig, WorkerModel, simulate_async
 from repro.data import make_batch
 from repro.models.transformer import Model, init_params
-from repro.train.loop import make_train_step
+from repro.train import Engine, checkpoint_hook, make_train_step
 
 LM_100M = ArchConfig(
     name="lm-100m",
@@ -50,6 +50,8 @@ def main():
     ap.add_argument("--sigma", type=float, default=1e-8)
     ap.add_argument("--ckpt", default="/tmp/lm100m.npz")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--chunk", type=int, default=10,
+                    help="steps per jitted scan chunk")
     args = ap.parse_args()
 
     cfg = LM_100M
@@ -65,9 +67,9 @@ def main():
     sgld = SGLDConfig(
         mode=args.mode, gamma=args.gamma, sigma=args.sigma,
         tau=args.tau if args.mode in ("consistent", "inconsistent") else 0)
-    sampler, step_fn = make_train_step(model, sgld)
-    state = sampler.init(params, key)
-    jstep = jax.jit(step_fn)
+    sampler, _ = make_train_step(model, sgld)
+    key, init_key = jax.random.split(key)
+    state = sampler.init(params, init_key)
 
     delays = None
     if args.mode in ("consistent", "inconsistent"):
@@ -77,19 +79,25 @@ def main():
         print(f"delay trace: mean {tr.mean_delay:.1f} max {tr.max_delay}")
 
     t0 = time.time()
-    losses = []
-    for k in range(args.steps):
-        key, bk = jax.random.split(key)
-        batch = make_batch(cfg, shape, bk, "train")
-        d = int(delays[k]) if delays is not None else 0
-        state, metrics = jstep(state, batch, d)
-        losses.append(float(metrics["loss"]))
-        if k % args.log_every == 0 or k == args.steps - 1:
-            tps = args.batch * args.seq * (k + 1) / (time.time() - t0)
-            print(f"step {k:4d}  loss {losses[-1]:7.4f}  "
-                  f"{tps:,.0f} tok/s  ({time.time()-t0:5.1f}s)", flush=True)
-        if args.ckpt and k > 0 and k % 100 == 0:
-            save_checkpoint(args.ckpt, state.params, step=k)
+
+    last_log = [-args.log_every]
+
+    def tok_log(step_end, state, aux):
+        if step_end - last_log[0] < args.log_every and step_end != args.steps:
+            return
+        last_log[0] = step_end
+        loss = float(np.asarray(aux["loss"])[-1])
+        tps = args.batch * args.seq * step_end / (time.time() - t0)
+        print(f"step {step_end - 1:4d}  loss {loss:7.4f}  "
+              f"{tps:,.0f} tok/s  ({time.time()-t0:5.1f}s)", flush=True)
+
+    hooks = [tok_log]
+    if args.ckpt:
+        hooks.append(checkpoint_hook(args.ckpt, every=100))
+    engine = Engine(sampler, batch_fn=lambda k: make_batch(cfg, shape, k, "train"),
+                    chunk_size=args.chunk, hooks=hooks)
+    state, metrics = engine.run(state, steps=args.steps, delays=delays, key=key)
+    losses = np.asarray(metrics["loss"])
 
     first, last = np.mean(losses[:10]), np.mean(losses[-10:])
     print(f"loss {first:.3f} -> {last:.3f} "

@@ -1,40 +1,43 @@
-"""Delayed-gradient SGLD — the paper's algorithm as a composable JAX sampler.
+"""Deprecated string-dispatched SGLD front end — use :mod:`repro.samplers`.
+
+``SGLDSampler`` is now a thin shim over the composable sampler-transform
+API: ``SGLDConfig(mode=...)`` maps one-to-one onto the
+``samplers.sgld(mode=...)`` presets (see the README migration table), and
+the trajectories are bit-identical because both front ends share the same
+leafwise math (``repro.samplers.transforms``).
 
 Update rule (paper eq. (4)):
 
     X_{k+1} = X_k - gamma_k * grad U(X_hat_k) + sqrt(2 sigma gamma_k) * G_k
 
-with four read models for ``X_hat_k``:
-
-- ``sync``         X_hat = X_k (paper's **Sync**: barrier + summed gradients —
-                   the standard data-parallel baseline; tau = 0).
-- ``consistent``   X_hat = X_{k - tau_k} whole-vector stale read (**W-Con**).
-- ``inconsistent`` [X_hat]_i = [X_{s_i}]_i per-coordinate stale read
-                   (**W-Icon**, Assumption 2.3).
-- ``pipeline``     X_{k+1} = X_k - gamma * AllReduce(grad U(X_{k-1})) + noise:
-                   the beyond-paper production mode — tau = 1 W-Con whose
-                   gradient all-reduce overlaps the next step's compute.
-
-Everything operates on arbitrary pytrees, jits cleanly, and shards
-transparently (the update is elementwise so it follows the parameter
-sharding; Langevin noise is generated shard-locally).
+with four read models for ``X_hat_k``: ``sync`` (X_hat = X_k), ``consistent``
+(W-Con whole-vector stale read), ``inconsistent`` (W-Icon per-coordinate
+read), ``pipeline`` (previous gradient; its all-reduce overlaps the next
+step's compute).
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import delay as delay_lib
-from repro.core.schedules import Schedule, constant
-from repro.utils import tree_keys, tree_zeros_like
+from repro.core.schedules import Schedule
+# The leafwise update math moved to the composable API; these aliases keep
+# the historical import sites (launch/steps.py, benchmarks) working.
+from repro.samplers.base import Sampler, SamplerState
+from repro.samplers.transforms import noise_like as langevin_noise  # noqa: F401
+from repro.samplers.transforms import sgld_apply as apply_update  # noqa: F401
 
 PyTree = Any
 GradFn = Callable[..., PyTree]  # grad_fn(params, batch) -> pytree of grads
+
+#: Deprecated alias — the driver state no longer special-cases ring buffers
+#: or pending gradients; transform state lives in ``state.inner``.
+SGLDState = SamplerState
 
 
 @dataclass(frozen=True)
@@ -57,112 +60,36 @@ class SGLDConfig:
         return jnp.asarray(self.gamma, jnp.float32)
 
 
-class SGLDState(NamedTuple):
-    params: PyTree
-    step: jax.Array                       # int32
-    key: jax.Array                        # PRNG key
-    ring: Optional[delay_lib.RingBuffer]  # consistent / inconsistent modes
-    pending_grad: Optional[PyTree]        # pipeline mode
-
-
-def langevin_noise(key: jax.Array, params: PyTree, scale: jnp.ndarray, dtype) -> PyTree:
-    """sqrt(2 sigma gamma) * G_k, one independent key per leaf, shard-local."""
-    keytree = tree_keys(key, params)
-    return jax.tree_util.tree_map(
-        lambda k, p: (scale * jax.random.normal(k, jnp.shape(p), dtype)).astype(p.dtype),
-        keytree,
-        params,
-    )
-
-
-def apply_update(params: PyTree, grads: PyTree, gamma: jnp.ndarray, noise: PyTree) -> PyTree:
-    """x - gamma*g + noise, leafwise (the fused Pallas path lives in kernels/)."""
-    return jax.tree_util.tree_map(
-        lambda p, g, n: (p - gamma.astype(p.dtype) * g.astype(p.dtype) + n).astype(p.dtype),
-        params,
-        grads,
-        noise,
-    )
-
-
 class SGLDSampler:
-    """Stateless-functional sampler; hold an instance, thread SGLDState.
+    """Deprecated shim: delegates to ``repro.samplers.sgld(mode=...)``.
 
     ``grad_fn(params, batch)`` may return either a gradient pytree or a
     ``(grads, aux)`` tuple; aux (e.g. the loss) is surfaced by ``step``.
     """
 
     def __init__(self, config: SGLDConfig, grad_fn: GradFn, has_aux: bool = False):
+        warnings.warn(
+            "SGLDSampler is deprecated; build the equivalent preset with "
+            "repro.samplers.sgld(mode=...) (or compose transforms with "
+            "repro.samplers.chain).",
+            DeprecationWarning, stacklevel=2)
+        from repro.samplers.presets import from_config  # lazy: import cycle
+
         self.config = config
         self.grad_fn = grad_fn
         self.has_aux = has_aux
+        self._sampler: Sampler = from_config(config, grad_fn, has_aux)
 
-    def _grads(self, params, batch):
-        out = self.grad_fn(params, batch)
-        if self.has_aux:
-            return out
-        return out, None
+    # -- delegation ----------------------------------------------------------
+    def init(self, params: PyTree, key: jax.Array) -> SamplerState:
+        return self._sampler.init(params, key)
 
-    # -- init ---------------------------------------------------------------
-    def init(self, params: PyTree, key: jax.Array) -> SGLDState:
-        cfg = self.config
-        ring = None
-        pending = None
-        if cfg.mode in ("consistent", "inconsistent"):
-            ring = delay_lib.init_ring(params, cfg.tau)
-        elif cfg.mode == "pipeline":
-            pending = tree_zeros_like(params)
-        return SGLDState(params=params, step=jnp.int32(0), key=key, ring=ring,
-                         pending_grad=pending)
+    def step(self, state: SamplerState, batch, delay_k: jax.Array | int = 0):
+        """One SGLD commit; ``delay_k`` is the realized staleness tau_k."""
+        return self._sampler.step(state, batch, delay_k)
 
-    # -- one update ----------------------------------------------------------
-    def step(self, state: SGLDState, batch, delay_k: jax.Array | int = 0):
-        """One SGLD commit.  ``delay_k`` is the realized staleness for this
-        commit (from a DelayTrace); ignored by sync/pipeline modes.
-        Returns (new_state, aux)."""
-        cfg = self.config
-        key, k_noise, k_delay = jax.random.split(state.key, 3)
-        gamma = cfg.gamma_at(state.step)
-        scale = jnp.sqrt(2.0 * cfg.sigma * gamma)
-        noise = langevin_noise(k_noise, state.params, scale, cfg.noise_dtype)
-        delay_k = jnp.asarray(delay_k, jnp.int32)
-
-        if cfg.mode == "sync":
-            grads, aux = self._grads(state.params, batch)
-            params = apply_update(state.params, grads, gamma, noise)
-            return SGLDState(params, state.step + 1, key, None, None), aux
-
-        if cfg.mode == "pipeline":
-            new_grad, aux = self._grads(state.params, batch)
-            # Apply the PREVIOUS step's (already all-reduced) gradient: tau=1
-            # W-Con. new_grad's all-reduce has no consumer this step -> XLA
-            # overlaps it with the next step's compute.
-            params = apply_update(state.params, state.pending_grad, gamma, noise)
-            return SGLDState(params, state.step + 1, key, None, new_grad), aux
-
-        ring = state.ring
-        if cfg.mode == "consistent":
-            x_hat = delay_lib.read_consistent(ring, delay_k)
-        else:  # inconsistent
-            delays = delay_lib.sample_coordinate_delays(k_delay, ring, delay_k)
-            x_hat = delay_lib.read_inconsistent(ring, delays)
-        grads, aux = self._grads(x_hat, batch)
-        params = apply_update(state.params, grads, gamma, noise)
-        ring = delay_lib.push(ring, params)
-        return SGLDState(params, state.step + 1, key, ring, None), aux
-
-    # -- a jit-compiled multi-step runner -------------------------------------
-    def run(self, state: SGLDState, batches, delays, *, collect: bool = True):
-        """lax.scan over pre-generated (batches, delays); returns final state
-        and (optionally) the iterate trajectory stacked on axis 0."""
-
-        def body(s, inp):
-            batch, d = inp
-            s, _ = self.step(s, batch, d)
-            out = s.params if collect else None
-            return s, out
-
-        return jax.lax.scan(body, state, (batches, delays))
+    def run(self, state: SamplerState, batches, delays, *, collect: bool = True):
+        return self._sampler.run(state, batches, delays, collect=collect)
 
 
 def make_minibatch_grad(potential, batch_size: int):

@@ -11,10 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import samplers
 from repro.core import (
     PolyRegression,
-    SGLDConfig,
-    SGLDSampler,
     WorkerModel,
     simulate_async,
     simulate_sync,
@@ -66,13 +65,12 @@ def run_regression_experiment(P: int = 18, nu: float = 0.1,
         is_sync = mode == "sync"
         n_commits = max(steps // P, 1) if is_sync else steps
         eff_batch = batch * P if is_sync else batch
-        cfg = SGLDConfig(mode=mode, gamma=gamma, sigma=sigma,
-                         tau=tau_cap if not is_sync else 0)
 
         def grad(p, key):
             return jax.grad(reg.value)(p, reg.sample_batch(key, eff_batch))
 
-        sampler = SGLDSampler(cfg, grad)
+        sampler = samplers.sgld(mode, grad, gamma=gamma, sigma=sigma,
+                                tau=tau_cap if not is_sync else 0)
         state = sampler.init(mu + 1.0, jax.random.PRNGKey(seed + 1))
         keys = jax.random.split(jax.random.PRNGKey(seed + 2), n_commits)
         if is_sync:

@@ -11,10 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import samplers
 from repro.core import (
     RICA,
-    SGLDConfig,
-    SGLDSampler,
     WorkerModel,
     simulate_async,
     simulate_sync,
@@ -50,8 +49,7 @@ def run_rica_experiment(P: int = 4, nu: float = 0.01, steps: int = 800,
     def grad(p, key):
         return rica.grad(p, rica.sample_batch(key, batch))
 
-    opt_cfg = SGLDConfig(mode="sync", gamma=gamma, sigma=0.0)
-    opt_sampler = SGLDSampler(opt_cfg, grad)
+    opt_sampler = samplers.sgld("sync", grad, gamma=gamma, sigma=0.0)
     opt_state = opt_sampler.init(w0, jax.random.PRNGKey(seed + 9))
     keys_opt = jax.random.split(jax.random.PRNGKey(seed + 10), 2 * steps)
     opt_state, _ = jax.jit(lambda s: opt_sampler.run(
@@ -67,13 +65,12 @@ def run_rica_experiment(P: int = 4, nu: float = 0.01, steps: int = 800,
         is_sync = mode == "sync"
         n_commits = max(steps // P, 1) if is_sync else steps
         eff_batch = batch * P if is_sync else batch
-        cfg = SGLDConfig(mode=mode, gamma=gamma, sigma=sigma,
-                         tau=tau_cap if not is_sync else 0)
 
         def grad_m(p, key, _b=eff_batch):
             return rica.grad(p, rica.sample_batch(key, _b))
 
-        sampler = SGLDSampler(cfg, grad_m)
+        sampler = samplers.sgld(mode, grad_m, gamma=gamma, sigma=sigma,
+                                tau=tau_cap if not is_sync else 0)
         state = sampler.init(w0, jax.random.PRNGKey(seed + 1))
         keys = jax.random.split(jax.random.PRNGKey(seed + 2), n_commits)
         if is_sync:

@@ -26,7 +26,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ArchConfig, ShapeConfig
-from repro.core.sgld import apply_update, langevin_noise
+from repro.samplers.transforms import noise_like as langevin_noise
+from repro.samplers.transforms import sgld_apply as apply_update
 from repro.data import make_specs
 from repro.launch.mesh import batch_axes_for, fsdp_axes_for
 from repro.models.common import partition_tree

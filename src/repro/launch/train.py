@@ -5,6 +5,10 @@ Real-hardware entry point (and CPU-reduced driver with --reduced):
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
         --steps 50 --mode pipeline --batch 8 --seq 128
 
+Training runs through the unified scan-chunked Engine: one jitted dispatch
+per --chunk steps, delays fed as device arrays (no per-delay retraces), and
+--fused commits through the Pallas fused Langevin kernel.
+
 On a TPU slice, omit --reduced: the production mesh is built, parameters are
 initialized sharded (init under jit with out_shardings), and the train step
 runs under the mesh with the shape's microbatching.
@@ -13,17 +17,16 @@ runs under the mesh with the shape's microbatching.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
-from repro.configs import SHAPES, ShapeConfig, get_arch, get_reduced
-from repro.core import SGLDConfig, WorkerModel, simulate_async
+from repro.configs import ShapeConfig, get_arch, get_reduced
+from repro.core import WorkerModel, simulate_async
+from repro.core.sgld import SGLDConfig
 from repro.data import make_batch
 from repro.models.transformer import Model, init_params
+from repro.train.engine import Engine, checkpoint_hook, log_hook
 from repro.train.loop import make_train_step
 
 
@@ -43,6 +46,10 @@ def main(argv=None):
     ap.add_argument("--gamma", type=float, default=1e-3)
     ap.add_argument("--sigma", type=float, default=1e-5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk", type=int, default=10,
+                    help="steps per jitted scan chunk")
+    ap.add_argument("--fused", action="store_true",
+                    help="commit through the Pallas fused Langevin kernel")
     ap.add_argument("--save", default=None, help="checkpoint path")
     args = ap.parse_args(argv)
 
@@ -54,14 +61,16 @@ def main(argv=None):
     params = init_params(key, cfg)
     n_params = sum(int(np.prod(p.shape))
                    for p in jax.tree_util.tree_leaves(params))
-    print(f"{cfg.name}: {n_params/1e6:.1f}M params, mode={args.mode}")
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, mode={args.mode}"
+          f"{' (fused)' if args.fused else ''}, chunk={args.chunk}")
 
     sgld_cfg = SGLDConfig(mode=args.mode, gamma=args.gamma, sigma=args.sigma,
                           tau=args.tau if args.mode in ("consistent",
                                                         "inconsistent") else 0)
-    sampler, step_fn = make_train_step(model, sgld_cfg)
-    state = sampler.init(params, key)
-    jstep = jax.jit(step_fn)
+    sampler, _ = make_train_step(model, sgld_cfg, fused=args.fused,
+                                 interpret=jax.default_backend() != "tpu")
+    key, init_key = jax.random.split(key)
+    state = sampler.init(params, init_key)
 
     delays = None
     if args.mode in ("consistent", "inconsistent"):
@@ -70,16 +79,15 @@ def main(argv=None):
                                seed=args.seed)
         delays = np.minimum(trace.delays, args.tau)
 
-    t0 = time.time()
-    for k in range(args.steps):
-        key, bk = jax.random.split(key)
-        batch = make_batch(cfg, shape, bk, "train")
-        d = int(delays[k]) if delays is not None else 0
-        state, metrics = jstep(state, batch, d)
-        if k % 10 == 0 or k == args.steps - 1:
-            print(f"step {k:4d} loss {float(metrics['loss']):8.4f} "
-                  f"({time.time()-t0:6.1f}s)", flush=True)
+    hooks = [log_hook(every=10)]
     if args.save:
+        hooks.append(checkpoint_hook(args.save, every=max(args.chunk, 100)))
+    engine = Engine(sampler, batch_fn=lambda k: make_batch(cfg, shape, k, "train"),
+                    chunk_size=args.chunk, hooks=hooks)
+    state, _ = engine.run(state, steps=args.steps, delays=delays, key=key)
+
+    if args.save:
+        from repro.checkpoint import save_checkpoint
         save_checkpoint(args.save, state.params, step=args.steps)
         print("saved", args.save)
 

@@ -97,6 +97,15 @@ def partition_rules(param_sharding: str, fsdp_axes=("data",), cfg=None,
                                                   False))
     q_shardable = bool(head_shard and model_size
                        and cfg.num_heads % model_size == 0)
+    # Never shard an attention projection finer than its head boundary:
+    # splitting one head's head_dim across devices forces cross-shard
+    # resharding inside rope/norm/attention (and miscompiles on some XLA
+    # CPU builds).  Unknown cfg/model_size keeps the legacy always-shard
+    # rule for backward compatibility.
+    q_head_ok = bool(cfg is None or not model_size
+                     or cfg.num_heads % model_size == 0)
+    kv_head_ok = bool(cfg is None or not model_size
+                      or cfg.num_kv_heads % model_size == 0)
     if head_shard:
         wq_spec = P(None, mdl) if q_shardable else P(None, None)
         wo_spec = P(mdl, None) if q_shardable else P(None, None)
@@ -104,8 +113,11 @@ def partition_rules(param_sharding: str, fsdp_axes=("data",), cfg=None,
         kvb_spec = P(None)
         qb_spec = P(mdl) if q_shardable else P(None)
     else:
-        wq_spec, wo_spec = P(None, mdl), P(mdl, None)
-        kv_spec, kvb_spec, qb_spec = P(None, mdl), P(mdl), P(mdl)
+        wq_spec = P(None, mdl) if q_head_ok else P(None, None)
+        wo_spec = P(mdl, None) if q_head_ok else P(None, None)
+        kv_spec = P(None, mdl) if kv_head_ok else P(None, None)
+        kvb_spec = P(mdl) if kv_head_ok else P(None)
+        qb_spec = P(mdl) if q_head_ok else P(None)
     rules = [
         # embeddings / head
         ("embed/w", P(mdl, None)),

@@ -20,6 +20,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+    _CHECK_KW = {"check_vma": False}
+else:  # jax 0.4.x spelling (and the check_vma kwarg was check_rep)
+    from jax.experimental.shard_map import shard_map
+    _CHECK_KW = {"check_rep": False}
+
 from repro.models.common import activation, dense_init
 
 CAPACITY_FACTOR = 1.25
@@ -134,8 +141,8 @@ def apply_moe(params, x, cfg, mesh=None, batch_axes=("data",),
         if name in params:
             pspecs[name] = sp
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(pspecs, bspec),
-             out_specs=(bspec, P()), check_vma=False)
+    @partial(shard_map, mesh=mesh, in_specs=(pspecs, bspec),
+             out_specs=(bspec, P()), **_CHECK_KW)
     def sharded(prm, xl):
         bl, sl, _ = xl.shape
         xt = xl.reshape(bl * sl, d)

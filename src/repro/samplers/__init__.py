@@ -1,0 +1,34 @@
+"""Composable sampler-transform API for delayed-gradient SGLD.
+
+Optax-style ``(init, update)`` primitives — :func:`delay_read`,
+:func:`gradients`, :func:`langevin_noise`, :func:`apply_sgld_update`,
+:func:`fused_update`, :func:`pipeline_overlap` — a :func:`chain`
+combinator, :class:`DelayPolicy` implementations, and the :func:`sgld`
+presets reproducing the paper's four read models.  The unified training
+driver over these samplers is :class:`repro.train.engine.Engine`.
+"""
+
+from repro.samplers.base import Sampler, SamplerState  # noqa: F401
+from repro.samplers.policies import (  # noqa: F401
+    ConstantDelay,
+    DelayPolicy,
+    PerCoordinateDelay,
+    TraceDelay,
+)
+from repro.samplers.presets import MODES, from_config, sgld  # noqa: F401
+from repro.samplers.transform import (  # noqa: F401
+    SamplerTransform,
+    StepContext,
+    chain,
+    stateless,
+)
+from repro.samplers.transforms import (  # noqa: F401
+    apply_sgld_update,
+    delay_read,
+    fused_update,
+    gradients,
+    langevin_noise,
+    noise_like,
+    pipeline_overlap,
+    sgld_apply,
+)

@@ -1,0 +1,88 @@
+"""The sampler driver: threads PRNG keys, the step counter, and the chained
+transform state through one commit, and offers a jit-friendly scan runner.
+
+The driver is deliberately thin — every modelling decision (stale reads,
+noise, fusion, overlap) lives in the transform chain, so new read models
+compose without touching this file.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.transform import SamplerTransform, StepContext
+
+if TYPE_CHECKING:  # repro.core.schedules.Schedule; kept lazy to avoid a cycle
+    Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+PyTree = Any
+
+
+class SamplerState(NamedTuple):
+    """Carry for the scan: iterate, commit counter, PRNG key, chain state."""
+
+    params: PyTree
+    step: jax.Array          # int32
+    key: jax.Array           # PRNG key
+    inner: Any               # tuple of per-transform states (from chain)
+
+
+@dataclass(frozen=True)
+class Sampler:
+    """A transform chain + a gamma schedule, driven one commit at a time."""
+
+    transform: SamplerTransform
+    gamma: float | Schedule = 1e-2
+
+    def gamma_at(self, step: jnp.ndarray) -> jnp.ndarray:
+        if callable(self.gamma):
+            return self.gamma(step)
+        return jnp.asarray(self.gamma, jnp.float32)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, params: PyTree, key: jax.Array) -> SamplerState:
+        return SamplerState(params=params, step=jnp.int32(0), key=key,
+                            inner=self.transform.init(params))
+
+    # -- one commit ----------------------------------------------------------
+    def step(self, state: SamplerState, batch: Any = None,
+             delay: jax.Array | int = 0) -> tuple[SamplerState, Any]:
+        """Run the chain once; ``delay`` is the realized staleness tau_k.
+        Returns ``(new_state, aux)`` with aux from the gradients stage."""
+        key, k_noise, k_delay = jax.random.split(state.key, 3)
+        ctx = StepContext(
+            params=state.params,
+            x_hat=state.params,
+            grads=None,
+            noise=None,
+            aux=None,
+            gamma=self.gamma_at(state.step),
+            key_noise=k_noise,
+            key_delay=k_delay,
+            step=state.step,
+            delay=jnp.asarray(delay, jnp.int32),
+            batch=batch,
+        )
+        ctx, inner = self.transform.update(ctx, state.inner)
+        return SamplerState(ctx.params, state.step + 1, key, inner), ctx.aux
+
+    # -- a jit-compiled multi-step runner -------------------------------------
+    def run(self, state: SamplerState, batches, delays=None, *,
+            collect: bool = True):
+        """lax.scan over pre-generated (batches, delays); returns final state
+        and (optionally) the iterate trajectory stacked on axis 0."""
+        if delays is None:
+            n = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            delays = jnp.zeros((n,), jnp.int32)
+
+        def body(s, inp):
+            batch, d = inp
+            s, _ = self.step(s, batch, d)
+            out = s.params if collect else None
+            return s, out
+
+        return jax.lax.scan(body, state, (batches, jnp.asarray(delays, jnp.int32)))

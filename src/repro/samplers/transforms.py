@@ -1,0 +1,149 @@
+"""The five sampler-transform primitives behind the paper's read models.
+
+Raw leafwise math (``noise_like`` / ``sgld_apply``) lives here too — it is
+the single source of truth shared by the transforms, the legacy
+``SGLDSampler`` shim, and the launch-stack step builders, which is what
+makes the new presets bit-compatible with the old sampler.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delay as delay_lib
+from repro.kernels.ops import fused_langevin_update
+from repro.samplers.transform import SamplerTransform, StepContext, stateless
+from repro.utils import tree_keys, tree_zeros_like
+
+if TYPE_CHECKING:  # annotation-only; a runtime import would cycle via core
+    from repro.samplers.policies import DelayPolicy
+
+PyTree = Any
+GradFn = Callable[..., PyTree]  # grad_fn(params, batch) -> grads | (grads, aux)
+
+
+# ---------------------------------------------------------------------------
+# raw leafwise math (shared with the legacy shim and launch/steps.py)
+# ---------------------------------------------------------------------------
+def noise_like(key: jax.Array, params: PyTree, scale: jnp.ndarray, dtype) -> PyTree:
+    """sqrt(2 sigma gamma) * G_k, one independent key per leaf, shard-local."""
+    keytree = tree_keys(key, params)
+    return jax.tree_util.tree_map(
+        lambda k, p: (scale * jax.random.normal(k, jnp.shape(p), dtype)).astype(p.dtype),
+        keytree,
+        params,
+    )
+
+
+def sgld_apply(params: PyTree, grads: PyTree, gamma: jnp.ndarray, noise: PyTree) -> PyTree:
+    """x - gamma*g + noise, leafwise (the fused Pallas path is ``fused_update``)."""
+    return jax.tree_util.tree_map(
+        lambda p, g, n: (p - gamma.astype(p.dtype) * g.astype(p.dtype) + n).astype(p.dtype),
+        params,
+        grads,
+        noise,
+    )
+
+
+def _key_bits(key: jax.Array) -> jax.Array:
+    """(2,) uint32 view of a PRNG key (raw or typed) for the Pallas RNG."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# transform primitives
+# ---------------------------------------------------------------------------
+def gradients(grad_fn: GradFn, has_aux: bool = False) -> SamplerTransform:
+    """Evaluate the gradient oracle at the (possibly stale) read point."""
+
+    def update(ctx: StepContext) -> StepContext:
+        out = grad_fn(ctx.x_hat, ctx.batch)
+        grads, aux = out if has_aux else (out, None)
+        return ctx._replace(grads=grads, aux=aux)
+
+    return stateless(update)
+
+
+def langevin_noise(sigma: float, schedule=None, noise_dtype=jnp.float32) -> SamplerTransform:
+    """Draw the injected noise ``sqrt(2 sigma gamma_k) G_k`` into ``ctx.noise``.
+
+    ``schedule`` optionally overrides the driver's ``gamma_k`` for the noise
+    scale only (e.g. to anneal temperature independently of the step size).
+    """
+
+    def update(ctx: StepContext) -> StepContext:
+        gamma = schedule(ctx.step) if schedule is not None else ctx.gamma
+        scale = jnp.sqrt(2.0 * sigma * gamma)
+        return ctx._replace(noise=noise_like(ctx.key_noise, ctx.params, scale,
+                                             noise_dtype))
+
+    return stateless(update)
+
+
+def apply_sgld_update() -> SamplerTransform:
+    """Commit ``X_{k+1} = X_k - gamma_k grad + noise`` (unfused reference path)."""
+
+    def update(ctx: StepContext) -> StepContext:
+        if ctx.grads is None:
+            raise ValueError("apply_sgld_update needs a gradients() stage first")
+        noise = ctx.noise if ctx.noise is not None else tree_zeros_like(ctx.params)
+        return ctx._replace(params=sgld_apply(ctx.params, ctx.grads, ctx.gamma, noise))
+
+    return stateless(update)
+
+
+def fused_update(sigma: float, *, interpret: bool = True) -> SamplerTransform:
+    """Commit through the Pallas fused kernel: noise is generated *in VMEM*
+    (counter-based threefry seeded from this step's noise key) and the
+    update is one read of (x, g) + one write of x' — replacing the
+    ``langevin_noise() + apply_sgld_update()`` pair in the hot path."""
+
+    def update(ctx: StepContext) -> StepContext:
+        if ctx.grads is None:
+            raise ValueError("fused_update needs a gradients() stage first")
+        scale = jnp.sqrt(2.0 * sigma * ctx.gamma)
+        params = fused_langevin_update(ctx.params, ctx.grads,
+                                       _key_bits(ctx.key_noise), ctx.gamma,
+                                       scale, interpret=interpret)
+        return ctx._replace(params=params)
+
+    return stateless(update)
+
+
+def pipeline_overlap() -> SamplerTransform:
+    """Swap this step's gradient for the previous one (tau=1 on the gradient
+    sequence).  The fresh gradient's all-reduce has no consumer this step,
+    so XLA overlaps it with the next step's compute."""
+
+    def init(params):
+        return tree_zeros_like(params)
+
+    def update(ctx: StepContext, pending):
+        if ctx.grads is None:
+            raise ValueError("pipeline_overlap needs a gradients() stage first")
+        return ctx._replace(grads=pending), ctx.grads
+
+    return SamplerTransform(init, update)
+
+
+def delay_read(policy: DelayPolicy) -> SamplerTransform:
+    """Maintain the iterate ring buffer and set the stale read point.
+
+    The last commit is pushed at the *start* of the step (value-identical to
+    pushing at the end of the previous step, and it keeps the ring state
+    local to this transform instead of special-cased in the driver state).
+    """
+
+    def init(params):
+        return delay_lib.init_ring(params, policy.tau)
+
+    def update(ctx: StepContext, ring):
+        ring = delay_lib.push(ring, ctx.params)
+        return ctx._replace(x_hat=policy.read(ctx, ring)), ring
+
+    return SamplerTransform(init, update)

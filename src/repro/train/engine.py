@@ -1,0 +1,163 @@
+"""Unified training driver: one jitted, scan-chunked engine for every host loop.
+
+Replaces the three hand-rolled per-step Python loops (``train/loop.py``,
+``launch/train.py``, the examples) with a single ``Engine``:
+
+- the inner loop is ``lax.scan`` over a chunk of pre-generated (batch, delay)
+  pairs, jitted once with ``donate_argnums`` so the sampler state is updated
+  in place — one dispatch per *chunk* instead of one per step;
+- delays enter as device ``int32`` arrays, so distinct delay values never
+  retrace (``engine.num_traces`` stays at the number of distinct chunk
+  lengths — asserted in tests);
+- host-side concerns (logging, checkpointing, metric collection) are
+  pluggable hooks that run between chunks.
+
+    engine = Engine(sampler, batch_fn=..., hooks=[log_hook(every=10)])
+    state, metrics = engine.run(state, steps=1000, delays=trace.delays)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.samplers.base import Sampler, SamplerState
+
+PyTree = Any
+BatchFn = Callable[[jax.Array], PyTree]  # key -> one batch (pure jax)
+#: hook(step_end, state, chunk_aux) -> None; chunk_aux is the stacked aux
+#: pytree for the chunk just finished (device arrays; index [-1] is newest).
+Hook = Callable[[int, SamplerState, Any], None]
+
+
+def log_hook(every: int = 10, log_fn: Callable[[str], None] = print,
+             key: str = "loss") -> Hook:
+    """Print ``key`` from the newest aux every ``every`` steps (chunk-aligned)."""
+    import time
+
+    t0 = time.time()
+    last = [-every]
+
+    def hook(step_end: int, state: SamplerState, aux) -> None:
+        if aux is None or step_end - last[0] < every:
+            return
+        last[0] = step_end
+        val = aux[key] if isinstance(aux, dict) and key in aux else aux
+        leaf = jax.tree_util.tree_leaves(val)
+        if not leaf:
+            return
+        scalar = float(np.asarray(leaf[0])[-1])
+        log_fn(f"step {step_end - 1:5d} {key} {scalar:8.4f} "
+               f"({time.time() - t0:6.1f}s)")
+
+    return hook
+
+
+def checkpoint_hook(path: str, every: int = 100) -> Hook:
+    """Save ``state.params`` to ``path`` every ``every`` steps."""
+    from repro.checkpoint import save_checkpoint
+
+    last = [0]
+
+    def hook(step_end: int, state: SamplerState, aux) -> None:
+        if step_end - last[0] < every:
+            return
+        last[0] = step_end
+        save_checkpoint(path, state.params, step=step_end)
+
+    return hook
+
+
+@dataclass
+class Engine:
+    """Scan-chunked SGLD training driver over a composable sampler.
+
+    ``batch_fn(key) -> batch`` must be pure-jax (it is vmapped over a chunk
+    of keys on device); pass ``batches=`` to ``run`` instead for
+    pre-generated data.  ``chunk_size`` trades host control granularity
+    (hooks, logging) against dispatch overhead.
+    """
+
+    sampler: Sampler
+    batch_fn: Optional[BatchFn] = None
+    chunk_size: int = 50
+    hooks: Sequence[Hook] = ()
+    donate: bool = True
+    collect_aux: bool = True
+
+    num_traces: int = field(default=0, init=False)  # jit retrace counter
+
+    def __post_init__(self):
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
+        donate = (0,) if self.donate else ()
+        self._run_chunk = jax.jit(self._chunk_body, donate_argnums=donate)
+        self._make_batches = (jax.jit(jax.vmap(self.batch_fn))
+                              if self.batch_fn is not None else None)
+
+    # -- jitted chunk ---------------------------------------------------------
+    def _chunk_body(self, state: SamplerState, batches, delays):
+        self.num_traces += 1  # python side effect: counts traces, not calls
+
+        def body(s, inp):
+            batch, d = inp
+            s, aux = self.sampler.step(s, batch, d)
+            return s, (aux if self.collect_aux else None)
+
+        return jax.lax.scan(body, state, (batches, delays))
+
+    # -- host driver ----------------------------------------------------------
+    def run(self, state: SamplerState, *, steps: int,
+            batches: Optional[PyTree] = None,
+            delays: Optional[np.ndarray] = None,
+            key: Optional[jax.Array] = None):
+        """Advance ``steps`` commits.  Returns ``(state, aux)`` where aux is
+        the per-step aux pytree stacked over all steps (or ``None``).
+
+        Provide either stacked ``batches`` (leading axis ``steps``) or a
+        ``batch_fn`` at construction plus ``key`` here to generate each
+        chunk's batches on device.
+        """
+        if batches is None and self._make_batches is None:
+            batches = jnp.zeros((steps, 1))  # batchless oracles (potentials)
+        if batches is None and key is None:
+            raise ValueError("generating batches from batch_fn needs `key`")
+        delays = (jnp.zeros((steps,), jnp.int32) if delays is None
+                  else jnp.asarray(delays, jnp.int32))
+        if delays.shape[0] < steps:
+            raise ValueError(f"delays has {delays.shape[0]} entries, "
+                             f"need {steps}")
+        if batches is not None:
+            n_batches = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            if n_batches < steps:  # dynamic_slice would silently clamp+reuse
+                raise ValueError(f"batches has {n_batches} entries, "
+                                 f"need {steps}")
+
+        aux_chunks = []
+        done = 0
+        while done < steps:
+            n = min(self.chunk_size, steps - done)
+            if batches is not None:
+                chunk_batches = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), batches)
+            else:
+                key, sub = jax.random.split(key)
+                chunk_batches = self._make_batches(jax.random.split(sub, n))
+            chunk_delays = jax.lax.dynamic_slice_in_dim(delays, done, n)
+            state, aux = self._run_chunk(state, chunk_batches, chunk_delays)
+            done += n
+            if self.collect_aux:
+                aux_chunks.append(aux)
+            for hook in self.hooks:
+                hook(done, state, aux)
+
+        if not aux_chunks:
+            return state, None
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
+            *aux_chunks)
+        return state, stacked

@@ -1,24 +1,25 @@
-"""Training loop: microbatched gradients + async-SGLD update.
+"""Training-loop substrate: microbatched gradients + async-SGLD samplers.
 
 ``make_grad_fn`` builds the gradient oracle the SGLD sampler consumes:
 value_and_grad of the model loss, with optional gradient accumulation over
 microbatches (lax.scan) so the big shapes fit HBM.  ``make_train_step``
-wires it into the paper's sampler (any mode: sync / consistent /
-inconsistent / pipeline), and ``train_loop`` is the host-side driver used by
-the examples and the end-to-end driver.
+wires it into a ``repro.samplers`` preset (any mode: sync / consistent /
+inconsistent / pipeline), and ``train_loop`` drives it through the unified
+scan-chunked :class:`repro.train.engine.Engine`.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.sgld import SGLDConfig, SGLDSampler
+from repro import samplers
+from repro.core.sgld import SGLDConfig
 from repro.models.transformer import Model, loss_fn
-from repro.utils import tree_add_scaled, tree_scale, tree_zeros_like
+from repro.train.engine import Engine, log_hook
+from repro.utils import tree_add_scaled, tree_zeros_like
 
 PyTree = Any
 
@@ -59,10 +60,12 @@ def make_grad_fn(model: Model, num_microbatches: int = 1):
     return accumulated
 
 
-def make_train_step(model: Model, sgld_cfg: SGLDConfig, num_microbatches: int = 1):
+def make_train_step(model: Model, sgld_cfg: SGLDConfig, num_microbatches: int = 1,
+                    *, fused: bool = False, interpret: bool = True):
     """Returns (sampler, step_fn); step_fn(state, batch, delay) -> (state, metrics)."""
     grad_fn = make_grad_fn(model, num_microbatches)
-    sampler = SGLDSampler(sgld_cfg, grad_fn, has_aux=True)
+    sampler = samplers.from_config(sgld_cfg, grad_fn, has_aux=True,
+                                   fused=fused, interpret=interpret)
 
     def step_fn(state, batch, delay=0):
         return sampler.step(state, batch, delay)
@@ -73,21 +76,21 @@ def make_train_step(model: Model, sgld_cfg: SGLDConfig, num_microbatches: int = 
 def train_loop(model: Model, params: PyTree, sgld_cfg: SGLDConfig,
                batch_fn: Callable[[jax.Array], PyTree], steps: int,
                key: jax.Array, delays=None, log_every: int = 10,
-               log_fn=print):
-    """Host driver: jitted step, host-side batches/delays, simple logging."""
-    sampler, step_fn = make_train_step(model, sgld_cfg)
-    state = sampler.init(params, key)
-    jstep = jax.jit(step_fn)
-    t0 = time.time()
-    history = []
-    for k in range(steps):
-        key, bk = jax.random.split(key)
-        batch = batch_fn(bk)
-        d = int(delays[k]) if delays is not None else 0
-        state, metrics = jstep(state, batch, d)
-        if k % log_every == 0 or k == steps - 1:
-            loss = float(metrics["loss"])
-            history.append((k, loss))
-            log_fn(f"step {k:5d} loss {loss:8.4f} "
-                   f"({time.time() - t0:6.1f}s)")
+               log_fn=print, num_microbatches: int = 1, chunk_size: int = 0):
+    """Train through the unified Engine: one jitted scan per chunk, delays as
+    device arrays (no per-delay-value retraces), logging via hook.
+
+    Returns ``(state, history)`` with history = [(step, loss), ...] at the
+    ``log_every`` cadence, as the old per-step loop did.
+    """
+    sampler, _ = make_train_step(model, sgld_cfg, num_microbatches)
+    key, init_key = jax.random.split(key)
+    state = sampler.init(params, init_key)
+    engine = Engine(sampler, batch_fn=batch_fn,
+                    chunk_size=chunk_size or max(1, log_every),
+                    hooks=[log_hook(every=log_every, log_fn=log_fn)])
+    state, aux = engine.run(state, steps=steps, delays=delays, key=key)
+    losses = aux["loss"]
+    idx = sorted(set(range(0, steps, log_every)) | {steps - 1})
+    history = [(k, float(losses[k])) for k in idx]
     return state, history

@@ -64,6 +64,15 @@ def tree_ravel(a: PyTree) -> jax.Array:
     return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
 
 
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` across JAX versions:
+    ``jax.set_mesh`` where it exists (>= 0.6), the ``Mesh`` context itself
+    on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

@@ -34,7 +34,8 @@ pstructs, pshard = param_structs(cfg, mesh, faxes)
 bstructs = batch_specs(cfg, shape, mesh, baxes)
 rep = NamedSharding(mesh, P())
 out = {}
-with jax.set_mesh(mesh):
+from repro.utils import use_mesh
+with use_mesh(mesh):
     step = make_sgld_train_step(model, shape)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
     compiled = jax.jit(step, out_shardings=(pshard, rep)).lower(
