@@ -1,0 +1,144 @@
+"""Ensemble-scale async-SGLD: empirical-W2-vs-wallclock and async-vs-sync
+speedup curves (the shape of paper Figs 1b/2b/3b), measured honestly.
+
+A C-chain :class:`~repro.cluster.ClusterEngine` ensemble advances C
+independent P-worker async runs in one jitted scan; at every chunk boundary
+the chain cloud is compared against draws from the closed-form Gibbs
+posterior of a quadratic potential with debiased Sinkhorn W2 — convergence
+*in measure*, no single-chain moment-matched proxy.  The synchronous
+baseline executes the barrier schedule (one update per round, round time =
+max over P workers) so both curves share a simulated wall-clock axis and a
+gradient-evaluation budget.
+
+``python benchmarks/bench_cluster.py [--smoke] [--out BENCH_cluster.json]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import (
+    ClusterEngine,
+    WorkerSchedule,
+    chain_positions,
+    ensemble_async,
+    ensemble_w2,
+    w2_recorder,
+)
+from repro.core import Quadratic, WorkerModel, simulate_sync, speedup_vs_sync
+from repro import samplers
+
+
+def _target_samples(quad: Quadratic, sigma: float, n: int, seed: int):
+    """Draws from the closed-form stationary law N(x*, sigma A^-1)."""
+    std = jnp.sqrt(quad.stationary_cov(sigma))
+    return quad.x_star + std * jax.random.normal(jax.random.PRNGKey(seed),
+                                                 (n, quad.d))
+
+
+def _run_ensemble(sampler, schedule, *, num_chains, steps, chunk, target,
+                  seed, jitter):
+    hook = w2_recorder(target, every=chunk, num_iters=100)
+    engine = ClusterEngine(sampler, num_chains=num_chains, chunk_size=chunk,
+                           hooks=[])
+    d = int(target.shape[1])
+    state = engine.init(jnp.zeros(d), jax.random.PRNGKey(seed), jitter=jitter)
+    # warm-up: compile the scan chunk and the Sinkhorn kernel off the clock
+    warm, _ = engine.run(state, steps=min(steps, chunk), schedule=schedule)
+    float(ensemble_w2(chain_positions(warm.params), target, num_iters=100))
+    engine.hooks = [hook]
+    state = engine.init(jnp.zeros(d), jax.random.PRNGKey(seed), jitter=jitter)
+    t0 = time.time()
+    state, _ = engine.run(state, steps=steps, schedule=schedule)
+    jax.block_until_ready(state.params)
+    return hook.record, time.time() - t0
+
+
+def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
+        d: int = 2, gamma: float = 0.05, sigma: float = 0.5,
+        n_target: int = 256, seed: int = 0, chunks: int = 16):
+    quad = Quadratic.make(jax.random.PRNGKey(seed), d=d, m=1.0, L=3.0)
+    target = _target_samples(quad, sigma, n_target, seed + 1)
+    grad = lambda p, b: quad.grad(p, b)  # noqa: E731
+
+    wm = WorkerModel(num_workers=workers, seed=seed)
+    async_scheds = ensemble_async(wm, commits, num_chains, seed=seed)
+    tau = max(s.max_delay for s in async_scheds)
+    chunk = max(1, commits // chunks)
+
+    async_sampler = samplers.sgld("consistent", grad, gamma=gamma,
+                                  sigma=sigma, tau=max(tau, 1))
+    async_rec, async_dev_s = _run_ensemble(
+        async_sampler, async_scheds, num_chains=num_chains, steps=commits,
+        chunk=chunk, target=target, seed=seed + 2, jitter=2.0)
+
+    # barrier baseline: commits//P rounds, each worth P gradient evaluations
+    rounds = max(1, commits // workers)
+    sync_trace = simulate_sync(wm, rounds, seed=seed)
+    sync_sched = WorkerSchedule.from_trace(sync_trace)
+    sync_sampler = samplers.sgld("sync", grad, gamma=gamma, sigma=sigma)
+    sync_chunk = max(1, rounds // chunks)
+    sync_rec, sync_dev_s = _run_ensemble(
+        sync_sampler, sync_sched, num_chains=num_chains, steps=rounds,
+        chunk=sync_chunk, target=target, seed=seed + 2, jitter=2.0)
+
+    speedup = speedup_vs_sync(async_scheds[0].to_trace(), sync_trace)
+    return {
+        "config": {"num_chains": num_chains, "workers": workers,
+                   "commits": commits, "d": d, "gamma": gamma, "sigma": sigma,
+                   "tau_realized": tau, "n_target": n_target, "seed": seed},
+        "async": {
+            "grad_evals": [r["step"] for r in async_rec],
+            "sim_time": [r["commit_time"] for r in async_rec],
+            "w2": [r["w2"] for r in async_rec],
+        },
+        "sync": {
+            "grad_evals": [r["step"] * workers for r in sync_rec],
+            "sim_time": [r["commit_time"] for r in sync_rec],
+            "w2": [r["w2"] for r in sync_rec],
+        },
+        "speedup_vs_sync": round(speedup, 3),
+        "final_w2_async": async_rec[-1]["w2"],
+        "final_w2_sync": sync_rec[-1]["w2"],
+        "device_wall_s": {"async": round(async_dev_s, 3),
+                          "sync": round(sync_dev_s, 3)},
+    }
+
+
+def _row(result: dict) -> dict:
+    us = result["device_wall_s"]["async"] / result["config"]["commits"] * 1e6
+    return {
+        "bench": "cluster", "us_per_call": round(us, 1),
+        "chains": result["config"]["num_chains"],
+        "workers": result["config"]["workers"],
+        "speedup_vs_sync": result["speedup_vs_sync"],
+        "final_w2_async": round(result["final_w2_async"], 4),
+        "final_w2_sync": round(result["final_w2_sync"], 4),
+    }
+
+
+SMOKE_KW = dict(num_chains=8, workers=4, commits=240, chunks=24, n_target=128)
+
+
+def main(fast: bool = True):
+    return [_row(run(**(SMOKE_KW if fast else {})))]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (8 chains, 240 commits)")
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    args = ap.parse_args()
+    result = run(**(SMOKE_KW if args.smoke else {}))
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(_row(result)))
+    print(f"wrote {args.out}")
+    if result["speedup_vs_sync"] <= 1.0:
+        raise SystemExit("async-vs-sync speedup did not exceed 1")

@@ -12,6 +12,7 @@ import sys
 import time
 
 from benchmarks import (
+    bench_cluster,
     bench_engine,
     bench_kernels,
     bench_regression,
@@ -28,6 +29,7 @@ BENCHES = {
     "tau_sweep": bench_tau_sweep.main,     # Corollary 2.1
     "kernels": bench_kernels.main,         # Pallas hot-path
     "engine": bench_engine.main,           # scan-chunked Engine vs host loop
+    "cluster": bench_cluster.main,         # C-chain ensemble W2 + speedup
     "roofline": bench_roofline.main,       # §Roofline table (from dry-run)
 }
 

@@ -1,0 +1,24 @@
+"""repro.cluster — device-parallel multi-chain async-SGLD execution.
+
+The paper's P asynchronous workers, made executable on device: compiled
+per-worker commit schedules (:mod:`~repro.cluster.schedule`), a vmapped
+C-chain ensemble of the full sampler transform chain
+(:mod:`~repro.cluster.ensemble`), and the :class:`ClusterEngine` scan-chunk
+executor that shards chains over a mesh's ``data`` axis
+(:mod:`~repro.cluster.executor`).
+"""
+
+from repro.cluster.ensemble import (  # noqa: F401
+    chain_positions,
+    ensemble_step,
+    ensemble_w2,
+    init_ensemble,
+    w2_recorder,
+)
+from repro.cluster.executor import ClusterEngine  # noqa: F401
+from repro.cluster.schedule import (  # noqa: F401
+    StalenessError,
+    WorkerSchedule,
+    ensemble_async,
+    stack_schedules,
+)

@@ -1,0 +1,193 @@
+"""ClusterEngine: the device-parallel multi-chain async-SGLD executor.
+
+Same contract as :class:`repro.train.engine.Engine` — jitted ``lax.scan``
+chunks, donated carry, host hooks between chunks, a flat retrace counter —
+but the carry is a C-chain :func:`~repro.cluster.ensemble.init_ensemble`
+state and each scan step advances the whole population through the vmapped
+transform chain.
+
+Delays are *endogenous*: the scan input is the schedule's per-chain
+``read_versions`` and the jitted body derives staleness as
+``server_version - read_version`` from the carried commit counter, so the
+device executes the worker schedule instead of consuming a staleness
+side-channel.  With ``mesh=`` the chunk body runs under the repo's
+``shard_map`` compat shim with chains split over the ``data`` axis — pure
+SPMD, no cross-chain communication, so per-chain trajectories are identical
+sharded or not.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.cluster.ensemble import ensemble_step, init_ensemble
+from repro.cluster.schedule import WorkerSchedule, stack_schedules
+from repro.core.delay import validate_staleness
+from repro.samplers.base import Sampler, SamplerState
+from repro.train.engine import Hook, drive_chunks
+from repro.utils import SHARD_MAP_CHECK_KW, shard_map
+
+PyTree = Any
+BatchFn = Callable[[jax.Array], PyTree]  # key -> one chain's batch (pure jax)
+
+#: accepted `schedule=` forms for :meth:`ClusterEngine.run`
+ScheduleLike = Any  # WorkerSchedule | Sequence[WorkerSchedule] | np.ndarray | None
+
+
+@dataclass
+class ClusterEngine:
+    """Scan-chunked executor for a C-chain async-SGLD ensemble.
+
+    ``batch_fn(key) -> batch`` (optional) generates an *independent*
+    minibatch per (step, chain) key on device; explicit ``batches`` passed to
+    :meth:`run` are broadcast to every chain unless ``per_chain_batches=True``
+    (then their second axis is the chain axis).  ``mesh`` shards the chain
+    axis over ``chain_axis`` (``num_chains`` must be divisible by that mesh
+    axis size).
+    """
+
+    sampler: Sampler
+    num_chains: int
+    chunk_size: int = 50
+    hooks: Sequence[Hook] = ()
+    donate: bool = True
+    collect_aux: bool = False
+    batch_fn: Optional[BatchFn] = None
+    per_chain_batches: bool = False
+    mesh: Any = None
+    chain_axis: str = "data"
+
+    num_traces: int = field(default=0, init=False)  # jit retrace counter
+
+    def __post_init__(self):
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.num_chains < 1:
+            raise ValueError(f"num_chains must be >= 1, got {self.num_chains}")
+        if self.mesh is not None:
+            n_shards = self.mesh.shape[self.chain_axis]
+            if self.num_chains % n_shards:
+                raise ValueError(
+                    f"num_chains={self.num_chains} must be divisible by mesh "
+                    f"axis {self.chain_axis!r} (size {n_shards})")
+        # one jitted chunk per batch layout; only the layouts actually run
+        # get traced/compiled (the counter they bump is shared)
+        self._chunk_shared = self._build_chunk(batch_axis=None)
+        self._chunk_per_chain = self._build_chunk(batch_axis=0)
+        self._make_batches = (jax.jit(jax.vmap(jax.vmap(self.batch_fn)))
+                              if self.batch_fn is not None else None)
+
+    def _build_chunk(self, batch_axis: Optional[int]):
+        """Jitted scan over one chunk; ``batch_axis=0`` vmaps the batch over
+        the chain axis, ``None`` broadcasts one batch to every chain."""
+
+        def chunk(state, batches, read_versions):
+            self.num_traces += 1  # python side effect: counts traces
+            step_fn = ensemble_step(self.sampler, batch_axis=batch_axis)
+
+            def body(s, inp):
+                batch, rv = inp
+                delay = s.step.astype(jnp.int32) - rv  # endogenous staleness
+                s, aux = step_fn(s, batch, delay)
+                return s, (aux if self.collect_aux else None)
+
+            return jax.lax.scan(body, state, (batches, read_versions))
+
+        if self.mesh is not None:
+            ax = self.chain_axis
+            batch_spec = P(None, ax) if batch_axis == 0 else P()
+            chunk = shard_map(chunk, mesh=self.mesh,
+                              in_specs=(P(ax), batch_spec, P(None, ax)),
+                              out_specs=(P(ax), P(None, ax)),
+                              **SHARD_MAP_CHECK_KW)
+        return jax.jit(chunk, donate_argnums=(0,) if self.donate else ())
+
+    # -- init -----------------------------------------------------------------
+    def init(self, params: PyTree, key: jax.Array, *,
+             jitter: float = 0.0) -> SamplerState:
+        """C-chain ensemble state; chain ``c``'s key is ``split(key, C)[c]``."""
+        state = init_ensemble(self.sampler, params, key,
+                              num_chains=self.num_chains, jitter=jitter)
+        if self.mesh is not None:
+            sharding = jax.sharding.NamedSharding(self.mesh, P(self.chain_axis))
+            state = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, sharding), state)
+        return state
+
+    # -- schedule normalization ------------------------------------------------
+    def _compile_schedule(self, schedule: ScheduleLike, steps: int):
+        """-> (read_versions (steps, C) int32, commit_times (steps, C) | None)."""
+        c = self.num_chains
+        if schedule is None:
+            k = np.arange(steps, dtype=np.int32)[:, None]  # fresh reads, tau=0
+            return np.tile(k, (1, c)), None
+        raw_delays = isinstance(schedule, (np.ndarray, jnp.ndarray))
+        if raw_delays:
+            arr = np.asarray(schedule)
+            if arr.ndim == 1:
+                schedule = WorkerSchedule.from_delays(arr)
+            elif arr.ndim == 2:
+                schedule = [WorkerSchedule.from_delays(arr[:, i])
+                            for i in range(arr.shape[1])]
+            else:
+                raise ValueError("delay array must be (steps,) or (steps, C)")
+        scheds = ([schedule] * c if isinstance(schedule, WorkerSchedule)
+                  else list(schedule))
+        if len(scheds) != c:
+            raise ValueError(f"got {len(scheds)} per-chain schedules for "
+                             f"{c} chains")
+        rv, times = stack_schedules(scheds, steps=steps)
+        # raw delay arrays carry no wall-clock information; don't present
+        # from_delays' synthetic arange times as simulated commit times
+        return rv, (None if raw_delays else times)
+
+    # -- host driver ----------------------------------------------------------
+    def run(self, state: SamplerState, *, steps: int,
+            schedule: ScheduleLike = None,
+            batches: Optional[PyTree] = None,
+            key: Optional[jax.Array] = None):
+        """Advance every chain ``steps`` commits under ``schedule``.
+
+        ``schedule`` may be one :class:`WorkerSchedule` (broadcast), a
+        sequence of C per-chain schedules, a raw delay ndarray
+        (``(steps,)`` or ``(steps, C)``), or ``None`` (synchronous, tau=0).
+        Returns ``(state, aux)`` with aux stacked ``(steps, C, ...)`` when
+        ``collect_aux`` (plus ``commit_times`` threaded into hook aux when
+        the schedule carries them).
+        """
+        read_versions, commit_times = self._compile_schedule(schedule, steps)
+        max_delay = int((np.arange(steps, dtype=np.int64)[:, None]
+                         - read_versions).max(initial=0))
+        validate_staleness(max_delay, state.inner, context="schedule")
+        # schedule versions are relative to this run's first commit; rebase
+        # onto the state's commit counter so continuation runs keep the
+        # endogenous staleness (step - read_version) equal to the schedule's
+        # tau_k instead of silently clamping at the ring depth.
+        read_versions = jnp.asarray(
+            read_versions + np.asarray(state.step)[None, :], jnp.int32)
+
+        # explicit batches follow the per_chain_batches contract; generated
+        # ones always carry a chain axis (one key per (step, chain))
+        per_chain = (self.per_chain_batches if batches is not None
+                     else self._make_batches is not None)
+        run_chunk = self._chunk_per_chain if per_chain else self._chunk_shared
+
+        def gen_batches(key, n):
+            key, sub = jax.random.split(key)
+            chunk_keys = jax.random.split(sub, n * self.num_chains)
+            chunk_keys = chunk_keys.reshape(
+                (n, self.num_chains) + chunk_keys.shape[1:])
+            return key, self._make_batches(chunk_keys)
+
+        return drive_chunks(
+            run_chunk, state, steps=steps, chunk_size=self.chunk_size,
+            hooks=self.hooks, collect_aux=self.collect_aux,
+            extra=read_versions, batches=batches,
+            gen_batches=gen_batches if self._make_batches is not None else None,
+            key=key, commit_times=commit_times)

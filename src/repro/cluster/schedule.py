@@ -1,0 +1,126 @@
+"""Executable worker schedules: the compiled form of a :class:`DelayTrace`.
+
+A :class:`~repro.core.delay_model.DelayTrace` records *realized staleness*
+``tau_k`` per commit — an exogenous host-side artifact.  A
+:class:`WorkerSchedule` re-expresses the same simulated execution as the
+thing the paper's P workers actually do: commit ``k`` was produced by worker
+``worker_ids[k]`` which *read* the shared iterate at server version
+``read_versions[k] = k - tau_k`` and committed at wall-clock
+``commit_times[k]``.
+
+The executor feeds ``read_versions`` to the device; the jitted step derives
+staleness *endogenously* as ``version_now - read_version`` (the server's
+commit counter is the scan carry), so delays are a consequence of the
+schedule rather than a side-channel input.  Because ``version_now == k`` in
+trace order, the derived staleness reproduces ``trace.delays`` exactly —
+which is what keeps the ensemble bit-compatible with the single-chain
+:class:`~repro.train.engine.Engine`.
+
+``stack_schedules`` batches C independent per-chain schedules into the
+``(steps, C)`` arrays the vmapped ensemble scans over; ``ensemble_async``
+builds them straight from a :class:`~repro.core.delay_model.WorkerModel`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.delay import StalenessError  # noqa: F401  (re-exported)
+from repro.core.delay import check_staleness_fits
+from repro.core.delay_model import DelayTrace, WorkerModel, simulate_async
+
+
+@dataclass(frozen=True)
+class WorkerSchedule:
+    """One chain's compiled commit schedule (trace order = commit order)."""
+
+    read_versions: np.ndarray  # (num_commits,) int32: server version each read saw
+    worker_ids: np.ndarray     # (num_commits,) int32: which worker committed
+    commit_times: np.ndarray   # (num_commits,) float64: simulated wall clock
+    num_workers: int
+
+    def __post_init__(self):
+        k = np.arange(len(self.read_versions))
+        if np.any(self.read_versions < 0) or np.any(self.read_versions > k):
+            raise ValueError("read_versions must satisfy 0 <= v_read[k] <= k")
+
+    def __len__(self) -> int:
+        return int(self.read_versions.shape[0])
+
+    @property
+    def delays(self) -> np.ndarray:
+        """Realized staleness tau_k = k - read_version[k] (host view)."""
+        return (np.arange(len(self), dtype=np.int64)
+                - self.read_versions).astype(np.int32)
+
+    @property
+    def max_delay(self) -> int:
+        return int(self.delays.max(initial=0))
+
+    @classmethod
+    def from_trace(cls, trace: DelayTrace) -> "WorkerSchedule":
+        k = np.arange(len(trace.delays), dtype=np.int64)
+        return cls(read_versions=(k - trace.delays).astype(np.int32),
+                   worker_ids=np.asarray(trace.worker_ids, np.int32),
+                   commit_times=np.asarray(trace.commit_times, np.float64),
+                   num_workers=trace.num_workers)
+
+    @classmethod
+    def from_delays(cls, delays: np.ndarray,
+                    commit_times: np.ndarray | None = None) -> "WorkerSchedule":
+        delays = np.asarray(delays, np.int64)
+        k = np.arange(len(delays), dtype=np.int64)
+        times = (np.arange(1, len(delays) + 1, dtype=np.float64)
+                 if commit_times is None else np.asarray(commit_times, np.float64))
+        return cls(read_versions=(k - delays).astype(np.int32),
+                   worker_ids=np.zeros(len(delays), np.int32),
+                   commit_times=times, num_workers=1)
+
+    @classmethod
+    def sync(cls, num_commits: int) -> "WorkerSchedule":
+        """Barrier baseline: every read is fresh (tau = 0)."""
+        return cls.from_delays(np.zeros(num_commits, np.int32))
+
+    def validate_ring(self, depth: int, context: str = "") -> None:
+        """Raise unless every read the schedule demands fits in the ring."""
+        check_staleness_fits(self.max_delay, depth, context or "schedule")
+
+    def to_trace(self) -> DelayTrace:
+        return DelayTrace(delays=self.delays, commit_times=self.commit_times,
+                          worker_ids=self.worker_ids,
+                          num_workers=self.num_workers)
+
+
+def stack_schedules(schedules: Sequence[WorkerSchedule],
+                    steps: int | None = None):
+    """Batch C per-chain schedules into ``(steps, C)`` arrays.
+
+    Returns ``(read_versions, commit_times)`` with the step axis leading, the
+    layout the executor's ``lax.scan`` consumes directly.  With ``steps``
+    each schedule is trimmed to its first ``steps`` commits (every schedule
+    must cover that many); without it the schedules must share one length.
+    """
+    if steps is None:
+        lengths = {len(s) for s in schedules}
+        if len(lengths) != 1:
+            raise ValueError("chains must share a commit count, got lengths "
+                             f"{sorted(lengths)} (or pass steps= to trim)")
+        steps = lengths.pop()
+    short = min(len(s) for s in schedules)
+    if short < steps:
+        raise ValueError(f"schedule covers {short} commits, need {steps}")
+    rv = np.stack([s.read_versions[:steps] for s in schedules], axis=1)
+    times = np.stack([s.commit_times[:steps] for s in schedules], axis=1)
+    return rv.astype(np.int32), times
+
+
+def ensemble_async(model: WorkerModel, num_commits: int, num_chains: int,
+                   seed: int = 0) -> list[WorkerSchedule]:
+    """C independent async executions of the same worker pool (chain c gets
+    its own event-driven simulation seeded ``seed + c``)."""
+    return [WorkerSchedule.from_trace(simulate_async(model, num_commits,
+                                                     seed=seed + c))
+            for c in range(num_chains)]

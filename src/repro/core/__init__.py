@@ -2,11 +2,15 @@
 
 from repro.core.delay import (  # noqa: F401
     RingBuffer,
+    StalenessError,
+    check_staleness_fits,
     init_ring,
     push,
     read_consistent,
     read_inconsistent,
+    ring_depths,
     sample_coordinate_delays,
+    validate_staleness,
 )
 from repro.core.delay_model import (  # noqa: F401
     DelayTrace,

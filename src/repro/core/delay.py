@@ -25,7 +25,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.utils import tree_keys
+from repro.utils import tree_broadcast_leading, tree_keys
 
 PyTree = Any
 
@@ -49,10 +49,41 @@ class RingBuffer:
 def init_ring(params: PyTree, tau: int) -> RingBuffer:
     """Fill every slot with the initial parameters (delay-0 warm start)."""
     depth = int(tau) + 1
-    history = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (depth,) + jnp.shape(x)).copy(), params
-    )
-    return RingBuffer(history=history, head=jnp.int32(0), depth=depth)
+    return RingBuffer(history=tree_broadcast_leading(params, depth),
+                      head=jnp.int32(0), depth=depth)
+
+
+class StalenessError(ValueError):
+    """A delay schedule demands staler reads than the iterate ring can serve."""
+
+
+def ring_depths(tree: PyTree) -> list[int]:
+    """Depths of every :class:`RingBuffer` inside ``tree`` (e.g. a sampler
+    state's transform-chain state) — lets drivers validate that a delay
+    schedule fits the history before ``read_consistent`` silently clamps."""
+    nodes = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: isinstance(x, RingBuffer))[0]
+    return [r.depth for r in nodes if isinstance(r, RingBuffer)]
+
+
+def check_staleness_fits(max_delay: int, depth: int,
+                         context: str = "schedule") -> None:
+    """Raise :class:`StalenessError` unless a ring of ``depth`` snapshots can
+    serve reads ``max_delay`` commits stale (``read_consistent`` clamps
+    silently — running anyway would sample a different, less stale process)."""
+    if max_delay >= depth:
+        raise StalenessError(
+            f"{context} max staleness {max_delay} does not fit the "
+            f"iterate ring (depth {depth}, max readable staleness "
+            f"{depth - 1}); read_consistent would silently clamp — "
+            f"build the sampler with tau >= {max_delay}")
+
+
+def validate_staleness(max_delay: int, tree: PyTree,
+                       context: str = "schedule") -> None:
+    """:func:`check_staleness_fits` against every ring inside ``tree``."""
+    for depth in ring_depths(tree):
+        check_staleness_fits(max_delay, depth, context)
 
 
 def push(ring: RingBuffer, params: PyTree) -> RingBuffer:

@@ -20,14 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-if hasattr(jax, "shard_map"):
-    shard_map = jax.shard_map
-    _CHECK_KW = {"check_vma": False}
-else:  # jax 0.4.x spelling (and the check_vma kwarg was check_rep)
-    from jax.experimental.shard_map import shard_map
-    _CHECK_KW = {"check_rep": False}
-
 from repro.models.common import activation, dense_init
+from repro.utils import SHARD_MAP_CHECK_KW as _CHECK_KW
+from repro.utils import shard_map
 
 CAPACITY_FACTOR = 1.25
 

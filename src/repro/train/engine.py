@@ -45,8 +45,10 @@ def log_hook(every: int = 10, log_fn: Callable[[str], None] = print,
     def hook(step_end: int, state: SamplerState, aux) -> None:
         if aux is None or step_end - last[0] < every:
             return
+        if isinstance(aux, dict) and key not in aux:
+            return  # e.g. only threaded commit times, nothing to log
         last[0] = step_end
-        val = aux[key] if isinstance(aux, dict) and key in aux else aux
+        val = aux[key] if isinstance(aux, dict) else aux
         leaf = jax.tree_util.tree_leaves(val)
         if not leaf:
             return
@@ -58,7 +60,12 @@ def log_hook(every: int = 10, log_fn: Callable[[str], None] = print,
 
 
 def checkpoint_hook(path: str, every: int = 100) -> Hook:
-    """Save ``state.params`` to ``path`` every ``every`` steps."""
+    """Save ``state.params`` to ``path`` every ``every`` steps.
+
+    The returned hook carries a ``flush`` attribute the engine calls after
+    the last chunk, so the final state is saved even when ``steps`` is not a
+    multiple of ``every``.
+    """
     from repro.checkpoint import save_checkpoint
 
     last = [0]
@@ -69,7 +76,87 @@ def checkpoint_hook(path: str, every: int = 100) -> Hook:
         last[0] = step_end
         save_checkpoint(path, state.params, step=step_end)
 
+    def flush(step_end: int, state: SamplerState) -> None:
+        if step_end > last[0]:
+            last[0] = step_end
+            save_checkpoint(path, state.params, step=step_end)
+
+    hook.flush = flush
     return hook
+
+
+def merge_commit_times(aux, t_chunk):
+    """Thread a chunk's host-side commit times into its aux under
+    ``"commit_time"`` (shared by Engine and ClusterEngine)."""
+    if aux is None:
+        return {"commit_time": t_chunk}
+    if isinstance(aux, dict):
+        return {**aux, "commit_time": t_chunk}
+    return {"aux": aux, "commit_time": t_chunk}
+
+
+def flush_hooks(hooks: Sequence[Hook], step_end: int,
+                state: SamplerState) -> None:
+    """After the final chunk, give every hook with a ``flush`` attribute a
+    chance to act on the terminal state (e.g. save the last checkpoint)."""
+    for hook in hooks:
+        flush = getattr(hook, "flush", None)
+        if flush is not None:
+            flush(step_end, state)
+
+
+def drive_chunks(run_chunk, state: SamplerState, *, steps: int,
+                 chunk_size: int, hooks: Sequence[Hook], collect_aux: bool,
+                 extra, batches: Optional[PyTree] = None,
+                 gen_batches=None, key: Optional[jax.Array] = None,
+                 commit_times=None):
+    """The host chunk loop shared by :class:`Engine` and
+    :class:`~repro.cluster.executor.ClusterEngine`.
+
+    ``run_chunk(state, batches, extra) -> (state, aux)`` is the jitted scan;
+    ``extra`` is the per-step device input sliced alongside the batches
+    (delays for Engine, read versions for ClusterEngine).  Provide stacked
+    ``batches`` or ``gen_batches(key, n) -> (key, chunk_batches)`` plus
+    ``key``.  ``commit_times`` (host, leading axis ``steps``) are merged
+    into each chunk's aux; hooks run between chunks and are flushed at the
+    end.
+    """
+    if batches is None and gen_batches is None:
+        batches = jnp.zeros((steps, 1))  # batchless oracles (potentials)
+    if batches is None and key is None:
+        raise ValueError("generating batches from batch_fn needs `key`")
+    if batches is not None:
+        n_batches = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        if n_batches < steps:  # dynamic_slice would silently clamp+reuse
+            raise ValueError(f"batches has {n_batches} entries, need {steps}")
+
+    aux_chunks = []
+    done = 0
+    while done < steps:
+        n = min(chunk_size, steps - done)
+        if batches is not None:
+            chunk_batches = jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), batches)
+        else:
+            key, chunk_batches = gen_batches(key, n)
+        chunk_extra = jax.lax.dynamic_slice_in_dim(extra, done, n)
+        state, aux = run_chunk(state, chunk_batches, chunk_extra)
+        done += n
+        if commit_times is not None:
+            aux = merge_commit_times(aux,
+                                     np.asarray(commit_times[done - n:done]))
+        if collect_aux:
+            aux_chunks.append(aux)
+        for hook in hooks:
+            hook(done, state, aux)
+    flush_hooks(hooks, done, state)
+
+    if not aux_chunks:
+        return state, None
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
+        *aux_chunks)
+    return state, stacked
 
 
 @dataclass
@@ -120,44 +207,33 @@ class Engine:
 
         Provide either stacked ``batches`` (leading axis ``steps``) or a
         ``batch_fn`` at construction plus ``key`` here to generate each
-        chunk's batches on device.
+        chunk's batches on device.  ``delays`` may also be a
+        :class:`~repro.core.delay_model.DelayTrace`; its ``commit_times``
+        are then threaded into the hook/return aux under ``"commit_time"``
+        so wall-clock-axis plots need no side channel.
         """
-        if batches is None and self._make_batches is None:
-            batches = jnp.zeros((steps, 1))  # batchless oracles (potentials)
-        if batches is None and key is None:
-            raise ValueError("generating batches from batch_fn needs `key`")
+        from repro.core.delay import validate_staleness
+        from repro.core.delay_model import DelayTrace
+
+        commit_times = None
+        if isinstance(delays, DelayTrace):
+            commit_times = delays.commit_times
+            delays = delays.delays
         delays = (jnp.zeros((steps,), jnp.int32) if delays is None
                   else jnp.asarray(delays, jnp.int32))
         if delays.shape[0] < steps:
             raise ValueError(f"delays has {delays.shape[0]} entries, "
                              f"need {steps}")
-        if batches is not None:
-            n_batches = jax.tree_util.tree_leaves(batches)[0].shape[0]
-            if n_batches < steps:  # dynamic_slice would silently clamp+reuse
-                raise ValueError(f"batches has {n_batches} entries, "
-                                 f"need {steps}")
+        validate_staleness(int(np.max(np.asarray(delays[:steps]), initial=0)),
+                           state.inner, context="trace")
 
-        aux_chunks = []
-        done = 0
-        while done < steps:
-            n = min(self.chunk_size, steps - done)
-            if batches is not None:
-                chunk_batches = jax.tree_util.tree_map(
-                    lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), batches)
-            else:
-                key, sub = jax.random.split(key)
-                chunk_batches = self._make_batches(jax.random.split(sub, n))
-            chunk_delays = jax.lax.dynamic_slice_in_dim(delays, done, n)
-            state, aux = self._run_chunk(state, chunk_batches, chunk_delays)
-            done += n
-            if self.collect_aux:
-                aux_chunks.append(aux)
-            for hook in self.hooks:
-                hook(done, state, aux)
+        def gen_batches(key, n):
+            key, sub = jax.random.split(key)
+            return key, self._make_batches(jax.random.split(sub, n))
 
-        if not aux_chunks:
-            return state, None
-        stacked = jax.tree_util.tree_map(
-            lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
-            *aux_chunks)
-        return state, stacked
+        return drive_chunks(
+            self._run_chunk, state, steps=steps, chunk_size=self.chunk_size,
+            hooks=self.hooks, collect_aux=self.collect_aux, extra=delays,
+            batches=batches,
+            gen_batches=gen_batches if self._make_batches is not None else None,
+            key=key, commit_times=commit_times)

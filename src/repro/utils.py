@@ -8,6 +8,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+if hasattr(jax, "shard_map"):  # jax >= 0.6 spelling
+    shard_map = jax.shard_map
+    SHARD_MAP_CHECK_KW = {"check_vma": False}
+else:  # jax 0.4.x spelling (and the check_vma kwarg was check_rep)
+    from jax.experimental.shard_map import shard_map
+    SHARD_MAP_CHECK_KW = {"check_rep": False}
+
 PyTree = Any
 
 
@@ -43,6 +50,13 @@ def tree_scale(a: PyTree, scale) -> PyTree:
 
 def tree_zeros_like(a: PyTree) -> PyTree:
     return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_broadcast_leading(a: PyTree, n: int) -> PyTree:
+    """Replicate every leaf along a new materialized leading axis of size
+    ``n`` (ring-buffer history slots, ensemble chain axes)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + jnp.shape(x)).copy(), a)
 
 
 def tree_dot(a: PyTree, b: PyTree) -> jax.Array:

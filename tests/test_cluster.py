@@ -1,0 +1,259 @@
+"""repro.cluster: ensemble parity with the single-chain Engine, executable
+schedule semantics, retrace flatness, staleness validation, sharded
+equivalence, and convergence-in-measure via empirical W2."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import samplers
+from repro.cluster import (
+    ClusterEngine,
+    StalenessError,
+    WorkerSchedule,
+    chain_positions,
+    ensemble_async,
+    ensemble_w2,
+    w2_recorder,
+)
+from repro.core import Quadratic, WorkerModel, constant_delays, simulate_async
+from repro.train.engine import Engine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+C, STEPS, TAU = 8, 37, 8
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return Quadratic.make(jax.random.PRNGKey(0), d=4, m=1.0, L=3.0)
+
+
+@pytest.fixture(scope="module")
+def quad_sampler(quad):
+    return samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
+                         gamma=0.01, sigma=0.5, tau=TAU)
+
+
+@pytest.fixture(scope="module")
+def schedules():
+    return ensemble_async(WorkerModel(num_workers=4, seed=1), STEPS, C, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# schedule semantics
+# ---------------------------------------------------------------------------
+def test_schedule_roundtrips_trace():
+    trace = simulate_async(WorkerModel(num_workers=4, seed=0), 50, seed=3)
+    sched = WorkerSchedule.from_trace(trace)
+    np.testing.assert_array_equal(sched.delays, trace.delays)
+    np.testing.assert_array_equal(sched.worker_ids, trace.worker_ids)
+    np.testing.assert_array_equal(sched.to_trace().commit_times,
+                                  trace.commit_times)
+    # read versions are causal: a commit can't read the future
+    assert np.all(sched.read_versions <= np.arange(50))
+
+
+def test_schedule_rejects_acausal_reads():
+    with pytest.raises(ValueError):
+        WorkerSchedule(read_versions=np.array([0, 2], np.int32),
+                       worker_ids=np.zeros(2, np.int32),
+                       commit_times=np.arange(2, dtype=np.float64),
+                       num_workers=1)
+
+
+def test_schedule_validate_ring():
+    sched = WorkerSchedule.from_delays(np.array([0, 1, 2, 3], np.int32))
+    sched.validate_ring(4)  # max delay 3 fits depth 4
+    with pytest.raises(StalenessError):
+        sched.validate_ring(3)
+
+
+# ---------------------------------------------------------------------------
+# ensemble parity: the acceptance-criterion bitwise check
+# ---------------------------------------------------------------------------
+def test_chain_parity_bitwise_vs_single_chain_engine(quad_sampler, schedules):
+    """Chain c of the vmapped C-chain ensemble must equal an independent
+    single-chain Engine.run with the same per-chain key and trace, bit for
+    bit — vmap and the endogenous version-derived delays change nothing."""
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10)
+    key = jax.random.PRNGKey(42)
+    state = engine.init(jnp.zeros(4), key)
+    state, _ = engine.run(state, steps=STEPS, schedule=schedules)
+    assert np.all(np.asarray(state.step) == STEPS)
+
+    chain_keys = jax.random.split(key, C)
+    for c in range(C):
+        single = Engine(quad_sampler, chunk_size=10)
+        st = quad_sampler.init(jnp.zeros(4), chain_keys[c])
+        st, _ = single.run(st, steps=STEPS, delays=schedules[c].to_trace())
+        assert np.array_equal(np.asarray(st.params),
+                              np.asarray(state.params[c])), f"chain {c}"
+
+
+def test_no_retrace_across_delay_values_and_schedules(quad_sampler, schedules):
+    """Distinct schedules (distinct delay values) at fixed shapes must not
+    retrigger compilation — delays enter as traced int32 read versions."""
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(0))
+    state, _ = engine.run(state, steps=30, schedule=schedules)
+    assert engine.num_traces == 1, engine.num_traces
+    other = ensemble_async(WorkerModel(num_workers=2, seed=9), 30, C, seed=50)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(1))
+    state, _ = engine.run(state, steps=30, schedule=other)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(2))
+    state, _ = engine.run(state, steps=30)  # sync (tau=0) schedule
+    assert engine.num_traces == 1, engine.num_traces
+
+
+def test_staleness_validation_raises(quad):
+    """A schedule staler than the ring depth must fail loudly, not clamp."""
+    shallow = samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
+                            gamma=0.01, sigma=0.5, tau=2)
+    engine = ClusterEngine(shallow, num_chains=C, chunk_size=10)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(0))
+    deep = constant_delays(5, 20)  # max delay 5 >= depth 3
+    with pytest.raises(StalenessError, match="does not fit the iterate ring"):
+        engine.run(state, steps=20,
+                   schedule=WorkerSchedule.from_trace(deep))
+
+
+def test_continuation_run_rebases_read_versions(quad_sampler, schedules):
+    """Resuming an advanced ensemble must realize the schedule's tau_k —
+    read versions are rebased onto the state's commit counter, so the second
+    leg stays bitwise-equal to a resumed single-chain Engine (not a
+    silently-clamped stale read)."""
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10)
+    key = jax.random.PRNGKey(11)
+    state = engine.init(jnp.zeros(4), key)
+    state, _ = engine.run(state, steps=20, schedule=schedules)
+    state, _ = engine.run(state, steps=17, schedule=schedules)  # resume
+
+    chain_keys = jax.random.split(key, C)
+    single = Engine(quad_sampler, chunk_size=10)
+    st = quad_sampler.init(jnp.zeros(4), chain_keys[2])
+    st, _ = single.run(st, steps=20, delays=schedules[2].to_trace())
+    st, _ = single.run(st, steps=17, delays=schedules[2].to_trace())
+    assert np.array_equal(np.asarray(st.params), np.asarray(state.params[2]))
+
+
+def test_per_chain_schedules_of_unequal_length(quad_sampler):
+    """Chains may carry schedules of different lengths as long as each
+    covers the requested steps — they are trimmed before stacking."""
+    scheds = [WorkerSchedule.from_delays(np.zeros(10 + c, np.int64))
+              for c in range(C)]
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=5)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(12))
+    state, _ = engine.run(state, steps=10, schedule=scheds)
+    assert np.all(np.asarray(state.step) == 10)
+    with pytest.raises(ValueError, match="covers 10 commits"):
+        engine.run(state, steps=11, schedule=scheds)
+
+
+def test_per_chain_batches_from_batch_fn(quad):
+    """batch_fn keys are split per (step, chain): every chain sees its own
+    minibatch and the ensemble stays finite."""
+    noisy = Quadratic.make(jax.random.PRNGKey(0), d=4, m=1.0, L=3.0,
+                           grad_noise=0.5)
+    sampler = samplers.sgld(
+        "sync", lambda p, batch: noisy.grad(p, None, key=batch["key"]),
+        gamma=0.01, sigma=0.5)
+    engine = ClusterEngine(sampler, num_chains=C, chunk_size=8,
+                           batch_fn=lambda k: {"key": jax.random.fold_in(k, 0)})
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(1))
+    state, _ = engine.run(state, steps=24, key=jax.random.PRNGKey(2))
+    params = np.asarray(state.params)
+    assert params.shape == (C, 4) and np.all(np.isfinite(params))
+    # independent batches: no two chains may share a trajectory
+    assert len({params[c].tobytes() for c in range(C)}) == C
+
+
+def test_explicit_batches_broadcast_even_with_batch_fn(quad_sampler):
+    """Explicit `batches` follow the per_chain_batches contract (broadcast
+    by default) even when a batch_fn is also configured on the engine."""
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10,
+                           batch_fn=lambda k: jnp.zeros(3))
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(13))
+    state, _ = engine.run(state, steps=20, batches=jnp.zeros((20, 3)))
+    assert np.all(np.asarray(state.step) == 20)
+
+
+def test_ensemble_w2_measures_convergence_in_measure():
+    """Overdispersed chain cloud contracts onto the Gibbs posterior: the
+    empirical W2 (exact 1-D quantile estimator) must drop well below its
+    starting value — the honest replacement for the single-chain proxy."""
+    quad = Quadratic.make(jax.random.PRNGKey(3), d=1, m=1.0, L=1.0)
+    sigma = 0.5
+    chains = 64
+    scheds = ensemble_async(WorkerModel(num_workers=4, seed=0), 200, chains,
+                            seed=7)
+    tau = max(s.max_delay for s in scheds)
+    sampler = samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
+                            gamma=0.05, sigma=sigma, tau=tau)
+    target = quad.x_star + jnp.sqrt(quad.stationary_cov(sigma)) * \
+        jax.random.normal(jax.random.PRNGKey(4), (chains, 1))
+    rec = w2_recorder(target, every=40)
+    engine = ClusterEngine(sampler, num_chains=chains, chunk_size=40,
+                           hooks=[rec])
+    state = engine.init(jnp.zeros(1), jax.random.PRNGKey(5), jitter=4.0)
+    w2_start = float(ensemble_w2(chain_positions(state.params), target))
+    state, _ = engine.run(state, steps=200, schedule=scheds)
+    w2_end = rec.record[-1]["w2"]
+    assert rec.record[-1]["commit_time"] is not None  # wall clock threaded
+    assert w2_end < 0.25 * w2_start, (w2_start, w2_end)
+
+
+# ---------------------------------------------------------------------------
+# sharded equivalence (subprocess: 8 forced host devices, debug mesh)
+# ---------------------------------------------------------------------------
+SCRIPT_SHARDED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro import samplers
+from repro.cluster import ClusterEngine, ensemble_async
+from repro.core import Quadratic, WorkerModel
+from repro.launch.mesh import make_debug_mesh
+
+quad = Quadratic.make(jax.random.PRNGKey(0), d=4, m=1.0, L=3.0)
+sampler = samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
+                        gamma=0.01, sigma=0.5, tau=8)
+C, steps = 8, 20
+scheds = ensemble_async(WorkerModel(num_workers=4, seed=1), steps, C, seed=0)
+key = jax.random.PRNGKey(42)
+
+local = ClusterEngine(sampler, num_chains=C, chunk_size=10)
+s_local = local.init(jnp.zeros(4), key)
+s_local, _ = local.run(s_local, steps=steps, schedule=scheds)
+
+mesh = make_debug_mesh(data=2, model=2)
+sharded = ClusterEngine(sampler, num_chains=C, chunk_size=10, mesh=mesh)
+s_shard = sharded.init(jnp.zeros(4), key)
+s_shard, _ = sharded.run(s_shard, steps=steps, schedule=scheds)
+
+spec = s_shard.params.sharding.spec
+print(json.dumps({
+    "bitwise_equal": bool(np.array_equal(np.asarray(s_local.params),
+                                         np.asarray(s_shard.params))),
+    "chain_axis_sharded": "data" in (spec[0] if spec else ()) or spec[0] == "data",
+    "traces": sharded.num_traces,
+}))
+"""
+
+
+def test_sharded_matches_unsharded_on_debug_mesh():
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT_SHARDED],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["bitwise_equal"], res
+    assert res["chain_axis_sharded"], res
+    assert res["traces"] == 1, res

@@ -125,6 +125,42 @@ def test_engine_generates_batches_on_device(quad_sampler):
     assert np.all(np.isfinite(np.asarray(state.params)))
 
 
+def test_checkpoint_hook_flushes_final_state(tmp_path, quad_sampler):
+    """steps not a multiple of `every` must still save the final state."""
+    ckpt = os.path.join(tmp_path, "flush_ckpt.npz")
+    engine = Engine(quad_sampler, chunk_size=10,
+                    hooks=[checkpoint_hook(ckpt, every=10)])
+    state = quad_sampler.init(jnp.zeros(4), jax.random.PRNGKey(7))
+    state, _ = engine.run(state, steps=25)
+    with np.load(ckpt) as data:
+        assert int(data["__step__"]) == 25
+
+
+def test_engine_accepts_delay_trace_and_threads_commit_times(quad_sampler):
+    from repro.core import constant_delays
+
+    trace = constant_delays(3, STEPS)
+    engine = Engine(quad_sampler, chunk_size=10)
+    state = quad_sampler.init(jnp.zeros(4), jax.random.PRNGKey(8))
+    state, aux = engine.run(state, steps=STEPS, delays=trace)
+    np.testing.assert_array_equal(aux["commit_time"], trace.commit_times)
+
+    # identical trajectory to passing the raw delays ndarray
+    state2 = quad_sampler.init(jnp.zeros(4), jax.random.PRNGKey(8))
+    state2, _ = engine.run(state2, steps=STEPS, delays=trace.delays)
+    np.testing.assert_array_equal(np.asarray(state.params),
+                                  np.asarray(state2.params))
+
+
+def test_engine_rejects_delays_deeper_than_ring(quad_sampler):
+    """tau=4 ring (depth 5) cannot serve staleness 5+: raise, don't clamp."""
+    engine = Engine(quad_sampler, chunk_size=10)
+    state = quad_sampler.init(jnp.zeros(4), jax.random.PRNGKey(9))
+    delays = np.asarray([0, 1, 5, 2] * 10)
+    with pytest.raises(ValueError, match="does not fit the iterate ring"):
+        engine.run(state, steps=STEPS, delays=delays)
+
+
 def test_train_loop_runs_through_engine():
     from dataclasses import replace
 
