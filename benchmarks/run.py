@@ -18,6 +18,7 @@ from benchmarks import (
     bench_regression,
     bench_rica,
     bench_roofline,
+    bench_serve,
     bench_speedup,
     bench_tau_sweep,
 )
@@ -30,6 +31,7 @@ BENCHES = {
     "kernels": bench_kernels.main,         # Pallas hot-path
     "engine": bench_engine.main,           # scan-chunked Engine vs host loop
     "cluster": bench_cluster.main,         # C-chain ensemble W2 + speedup
+    "serve": bench_serve.main,             # chain-bank predictive serving
     "roofline": bench_roofline.main,       # §Roofline table (from dry-run)
 }
 

@@ -1,0 +1,86 @@
+"""CI perf-regression gate for the cluster benchmark.
+
+Compares a freshly produced ``BENCH_cluster.json`` against the committed
+baseline (``benchmarks/baselines/BENCH_cluster.json``) inside a tolerance
+band and exits non-zero on regression, so the ``bench-smoke`` job *fails*
+instead of merely uploading an artifact:
+
+- ``speedup_vs_sync`` (async-vs-sync at equal gradient evaluations) may not
+  fall more than ``--tol-speedup`` below the baseline, and must stay > 1;
+- W2-at-budget (``final_w2_async``, the chain cloud's empirical W2 against
+  the Gibbs posterior after the full commit budget) may not rise more than
+  ``--tol-w2`` above the baseline.
+
+Both runs are seeded, so the bands only absorb cross-platform float noise —
+keep them tight.  To accept an intentional change, re-run the benchmark and
+commit the new JSON as the baseline.
+
+    python scripts/check_bench.py BENCH_cluster.json \
+        --baseline benchmarks/baselines/BENCH_cluster.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, *, tol_speedup: float,
+          tol_w2: float) -> list[str]:
+    """Returns a list of human-readable regression messages (empty = pass)."""
+    failures = []
+    sp, sp0 = current["speedup_vs_sync"], baseline["speedup_vs_sync"]
+    floor = sp0 * (1.0 - tol_speedup)
+    if sp <= 1.0:
+        failures.append(f"async-vs-sync speedup {sp:.3f} does not exceed 1")
+    elif sp < floor:
+        failures.append(
+            f"async-vs-sync speedup regressed: {sp:.3f} < {floor:.3f} "
+            f"(baseline {sp0:.3f}, tolerance {tol_speedup:.0%})")
+    w2, w20 = current["final_w2_async"], baseline["final_w2_async"]
+    ceil = w20 * (1.0 + tol_w2)
+    if w2 > ceil:
+        failures.append(
+            f"W2-at-budget regressed: {w2:.4f} > {ceil:.4f} "
+            f"(baseline {w20:.4f}, tolerance {tol_w2:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", help="fresh BENCH_cluster.json to validate")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_cluster.json")
+    ap.add_argument("--tol-speedup", type=float, default=0.20,
+                    help="allowed fractional speedup drop (default 0.20)")
+    ap.add_argument("--tol-w2", type=float, default=0.50,
+                    help="allowed fractional W2 increase (default 0.50)")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    cfg, cfg0 = current.get("config", {}), baseline.get("config", {})
+    if cfg != cfg0:
+        diff = {k for k in set(cfg) | set(cfg0) if cfg.get(k) != cfg0.get(k)}
+        print(f"check_bench: config drift vs baseline in {sorted(diff)} — "
+              "comparing anyway; recommit the baseline if intentional")
+
+    failures = check(current, baseline, tol_speedup=args.tol_speedup,
+                     tol_w2=args.tol_w2)
+    print(f"speedup_vs_sync {current['speedup_vs_sync']:.3f} "
+          f"(baseline {baseline['speedup_vs_sync']:.3f}), "
+          f"final_w2_async {current['final_w2_async']:.4f} "
+          f"(baseline {baseline['final_w2_async']:.4f})")
+    for msg in failures:
+        print(f"REGRESSION: {msg}")
+    if not failures:
+        print("check_bench: PASS")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,1 +1,6 @@
-from repro.checkpoint.io import restore_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    checkpoint_step,
+    restore_checkpoint,
+    restore_ensemble,
+    save_checkpoint,
+)

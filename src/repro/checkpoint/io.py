@@ -61,6 +61,41 @@ def restore_checkpoint(path: str, like: PyTree) -> PyTree:
         treedef, [jnp.asarray(arrays[p]) for p in leaves_with_paths])
 
 
+def restore_ensemble(path: str, like: PyTree, *,
+                     num_chains: int | None = None) -> PyTree:
+    """Restore chain-stacked ("ensemble layout") params for serving.
+
+    ``like`` is the *single-chain* params structure; the shapes on disk
+    decide the layout.  An ensemble checkpoint — every leaf carrying one
+    extra leading axis of a common chain count (what
+    :meth:`~repro.cluster.executor.ClusterEngine.save_ensemble` writes) —
+    restores as-is; a single-model checkpoint is broadcast to
+    ``num_chains`` identical chains (required then).  Mixed or mismatched
+    layouts fail loudly.
+    """
+    from repro.utils import tree_broadcast_leading
+
+    tree = restore_checkpoint(path, like)
+    got = jax.tree_util.tree_leaves(tree)
+    want = [tuple(jnp.shape(x)) for x in jax.tree_util.tree_leaves(like)]
+    if all(g.shape == w for g, w in zip(got, want)):
+        if num_chains is None:
+            raise ValueError(
+                f"{path} holds a single-model checkpoint; pass num_chains= "
+                "to broadcast it into a chain bank")
+        return tree_broadcast_leading(tree, num_chains)
+    stacked = [g.ndim > 0 and g.shape[1:] == w for g, w in zip(got, want)]
+    chain_counts = {g.shape[0] for g, s in zip(got, stacked) if s}
+    if not all(stacked) or len(chain_counts) != 1:
+        raise ValueError(
+            f"{path} is neither a single-model nor a chain-stacked "
+            f"checkpoint for the given `like` structure")
+    c = chain_counts.pop()
+    if num_chains is not None and num_chains != c:
+        raise ValueError(f"{path} holds {c} chains, asked for {num_chains}")
+    return tree
+
+
 def checkpoint_step(path: str) -> int | None:
     with np.load(path) as data:
         if "__step__" in data.files:

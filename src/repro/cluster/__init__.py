@@ -3,9 +3,11 @@
 The paper's P asynchronous workers, made executable on device: compiled
 per-worker commit schedules (:mod:`~repro.cluster.schedule`), a vmapped
 C-chain ensemble of the full sampler transform chain
-(:mod:`~repro.cluster.ensemble`), and the :class:`ClusterEngine` scan-chunk
+(:mod:`~repro.cluster.ensemble`), the :class:`ClusterEngine` scan-chunk
 executor that shards chains over a mesh's ``data`` axis
-(:mod:`~repro.cluster.executor`).
+(:mod:`~repro.cluster.executor`), and the :class:`ServeEngine` that answers
+posterior-predictive queries straight from the sharded chain bank
+(:mod:`~repro.cluster.serve`).
 """
 
 from repro.cluster.ensemble import (  # noqa: F401
@@ -16,6 +18,12 @@ from repro.cluster.ensemble import (  # noqa: F401
     w2_recorder,
 )
 from repro.cluster.executor import ClusterEngine  # noqa: F401
+from repro.cluster.serve import (  # noqa: F401
+    ServeEngine,
+    ServeResult,
+    bucket_size,
+    predictive_stats,
+)
 from repro.cluster.schedule import (  # noqa: F401
     StalenessError,
     WorkerSchedule,

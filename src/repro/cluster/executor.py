@@ -120,6 +120,17 @@ class ClusterEngine:
                 lambda x: jax.device_put(x, sharding), state)
         return state
 
+    # -- state export ---------------------------------------------------------
+    def save_ensemble(self, state: SamplerState, path: str) -> None:
+        """Export the chain bank: the chain-stacked params in the ensemble
+        layout :func:`~repro.checkpoint.restore_ensemble` (and therefore
+        :meth:`~repro.cluster.serve.ServeEngine.from_checkpoint`) restores,
+        with the newest per-chain commit counter as the checkpoint step."""
+        from repro.checkpoint import save_checkpoint
+
+        save_checkpoint(path, state.params,
+                        step=int(np.max(np.asarray(state.step))))
+
     # -- schedule normalization ------------------------------------------------
     def _compile_schedule(self, schedule: ScheduleLike, steps: int):
         """-> (read_versions (steps, C) int32, commit_times (steps, C) | None)."""

@@ -1,0 +1,240 @@
+"""Posterior-predictive serving from the sharded chain bank.
+
+A converged :class:`~repro.cluster.executor.ClusterEngine` ensemble is a
+device-resident cloud of posterior samples — exactly what the paper's
+convergence-in-measure guarantee promises.  The practical payoff (as in
+Chen et al.'s stale-gradient SG-MCMC) is Bayesian model averaging at
+prediction time: :class:`ServeEngine` answers batched predictive queries
+straight from the chain axis — ensemble-averaged forward passes, per-query
+credible intervals/quantiles, and predictive variance — without ever
+gathering the parameter bank to host.
+
+Collective layout (``mesh=``): the bank stays sharded over ``chain_axis``
+and the query batch is replicated; each shard vmaps the model forward over
+its local chains, then only the per-chain *predictions* ``(C, Q, ...)`` —
+a model-size-independent block — cross the shards via ``all_gather`` before
+every shard reduces them to the final per-query statistics.  The reduction
+runs on the gathered block with exactly the ops the single-device path
+uses (sorted quantiles included), so sharded and unsharded statistics are
+bitwise-identical — asserted in ``tests/test_serve.py``.  A psum-of-partial-
+sums mean would save the gather but floats add non-associatively, which
+would silently break that parity contract.
+
+Request batching is shape-bucketed: query counts are padded up a bucket
+ladder (powers of two by default) by edge-replicating the last query, so a
+mixed request stream compiles **one trace per bucket** and the padded query
+buffer — created fresh per request — is donated to the jitted call.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.samplers.base import SamplerState
+from repro.utils import SHARD_MAP_CHECK_KW, shard_map
+
+PyTree = Any
+#: per-chain forward: (single-chain params, queries (Q, ...)) -> preds (Q, ...)
+PredictFn = Callable[[PyTree, PyTree], jax.Array]
+
+
+class ServeResult(NamedTuple):
+    """Per-query predictive statistics over the chain axis.
+
+    ``mean``/``var`` are ``(Q, ...)`` (ensemble average and population
+    variance of the per-chain predictions); ``quantiles`` is
+    ``(len(qs), Q, ...)`` in the order the engine's ``quantiles`` were
+    given — ``result.quantiles[0]``/``[-1]`` bracket the credible interval
+    for the default ``(0.05, 0.5, 0.95)``.
+    """
+
+    mean: jax.Array
+    var: jax.Array
+    quantiles: jax.Array
+
+    @property
+    def std(self):
+        if isinstance(self.var, np.ndarray):
+            return np.sqrt(self.var)
+        return jnp.sqrt(self.var)
+
+
+def predictive_stats(preds: jax.Array, qs: jax.Array) -> ServeResult:
+    """Reduce per-chain predictions ``(C, Q, ...)`` to per-query statistics.
+
+    The single source of truth for the reduction: the sharded path calls it
+    on the all-gathered prediction block, the single-device path on the
+    vmapped output, so the two are bitwise-identical by construction.
+    """
+    mean = jnp.mean(preds, axis=0)
+    var = jnp.mean(jnp.square(preds - mean), axis=0)
+    quantiles = jnp.quantile(preds, qs, axis=0)
+    return ServeResult(mean=mean, var=var, quantiles=quantiles)
+
+
+def bucket_size(n: int, buckets: Optional[Sequence[int]] = None) -> int:
+    """Smallest bucket holding ``n`` queries: the next power of two, or the
+    smallest entry of an explicit ``buckets`` ladder (which is a contract —
+    a request larger than its top rung fails loudly instead of re-tracing)."""
+    if n < 1:
+        raise ValueError(f"need at least one query, got {n}")
+    if buckets is None:
+        return 1 << (n - 1).bit_length()
+    fits = [b for b in buckets if b >= n]
+    if not fits:
+        raise ValueError(f"{n} queries exceed the largest bucket "
+                         f"{max(buckets)}; pass a deeper `buckets` ladder")
+    return min(fits)
+
+
+def _pad_queries(queries: PyTree, n: int, *, copy_exact: bool) -> PyTree:
+    """Pad every leaf's leading (query) axis to ``n`` by edge-replicating the
+    last query.  ``copy_exact`` shields an exact-bucket-size device array
+    behind a copy so a donating engine never consumes the caller's buffer;
+    a non-donating engine skips that copy on its hot path.
+
+    Host (numpy) queries — the common serving entry point — are padded
+    with numpy: unlike an eager ``jnp.concatenate``, that compiles nothing,
+    so a stream of distinct request sizes stays at one XLA program per
+    *bucket* instead of one pad program per *size*.
+    """
+
+    def pad(x):
+        if not isinstance(x, jax.Array):  # host query: numpy pad, no compile
+            x = np.asarray(x)
+            extra = n - x.shape[0]
+            if extra == 0:
+                return x  # jit transfers host arrays; caller's buffer intact
+            return np.concatenate(
+                [x, np.broadcast_to(x[-1:], (extra,) + x.shape[1:])], axis=0)
+        extra = n - x.shape[0]
+        if extra == 0:
+            # only a donating engine needs to shield the caller's buffer
+            return x.copy() if copy_exact else x
+        return jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (extra,) + x.shape[1:])], axis=0)
+
+    return jax.tree_util.tree_map(pad, queries)
+
+
+@dataclass
+class ServeEngine:
+    """Batched posterior-predictive serving over a chain-stacked parameter
+    bank.
+
+    ``predict_fn(params, queries) -> preds`` is the *single-chain* forward
+    (leading query axis in and out); ``params`` is the chain-stacked bank
+    ``(C, ...)`` — a :class:`ClusterEngine` state's params, or anything
+    :func:`~repro.checkpoint.restore_ensemble` produces.  With ``mesh=`` the
+    bank is sharded over ``chain_axis`` and only per-chain predictions cross
+    the shards (see module docstring).
+
+    ``donate`` hands the padded query buffer to the jitted call.  Donation
+    only pays off when a query leaf can alias a float statistic buffer; for
+    dtypes that never can (e.g. int token batches) set ``donate=False`` to
+    skip the exact-bucket shield copy and jax's unusable-donation warning.
+    """
+
+    predict_fn: PredictFn
+    params: PyTree
+    quantiles: Sequence[float] = (0.05, 0.5, 0.95)
+    buckets: Optional[Sequence[int]] = None
+    mesh: Any = None
+    chain_axis: str = "data"
+    donate: bool = True
+
+    num_traces: int = field(default=0, init=False)  # one per shape bucket
+
+    def __post_init__(self):
+        leaves = jax.tree_util.tree_leaves(self.params)
+        if not leaves:
+            raise ValueError("params bank is empty")
+        self.num_chains = int(leaves[0].shape[0])
+        if self.buckets is not None:
+            self.buckets = sorted(int(b) for b in self.buckets)
+        self._qs = jnp.asarray(self.quantiles, jnp.float32)
+        if self.mesh is not None:
+            n_shards = self.mesh.shape[self.chain_axis]
+            if self.num_chains % n_shards:
+                raise ValueError(
+                    f"num_chains={self.num_chains} must be divisible by mesh "
+                    f"axis {self.chain_axis!r} (size {n_shards})")
+            sharding = jax.sharding.NamedSharding(self.mesh, P(self.chain_axis))
+            self.params = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, sharding), self.params)
+        self._stats = jax.jit(self._build_stats(),
+                              donate_argnums=(1,) if self.donate else ())
+
+    def _build_stats(self):
+        forward = jax.vmap(self.predict_fn, in_axes=(0, None))
+
+        def stats(params, queries):
+            self.num_traces += 1  # python side effect: counts traces
+            return predictive_stats(forward(params, queries), self._qs)
+
+        if self.mesh is None:
+            return stats
+        ax = self.chain_axis
+
+        def sharded_stats(params, queries):
+            self.num_traces += 1
+
+            def body(p, q):
+                local = forward(p, q)  # (C/shards, Q, ...)
+                preds = jax.lax.all_gather(local, ax, axis=0, tiled=True)
+                return predictive_stats(preds, self._qs)
+
+            return shard_map(body, mesh=self.mesh, in_specs=(P(ax), P()),
+                             out_specs=P(), **SHARD_MAP_CHECK_KW)(
+                                 params, queries)
+
+        return sharded_stats
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_cluster(cls, state: SamplerState | PyTree,
+                     predict_fn: PredictFn, **kw) -> "ServeEngine":
+        """Serve directly from a (possibly still sharded) ClusterEngine
+        state — or any chain-stacked params pytree."""
+        params = state.params if isinstance(state, SamplerState) else state
+        return cls(predict_fn=predict_fn, params=params, **kw)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, like: PyTree, predict_fn: PredictFn,
+                        *, num_chains: Optional[int] = None,
+                        **kw) -> "ServeEngine":
+        """Restore a bank saved by :meth:`ClusterEngine.save_ensemble` (or
+        broadcast a single-model checkpoint to ``num_chains``) and serve it.
+        ``like`` is the *single-chain* params structure."""
+        from repro.checkpoint import restore_ensemble
+
+        params = restore_ensemble(path, like, num_chains=num_chains)
+        return cls(predict_fn=predict_fn, params=params, **kw)
+
+    # -- serving --------------------------------------------------------------
+    def serve(self, queries: PyTree) -> ServeResult:
+        """Answer one batched predictive request.
+
+        ``queries`` leaves share a leading query axis ``Q``; the batch is
+        padded to its shape bucket and pushed through the
+        traced-once-per-bucket jitted reduction.  Returns a
+        :class:`ServeResult` of *host* (numpy) per-query statistics — this
+        is the serving boundary, and trimming the padding on host keeps a
+        stream of distinct request sizes from compiling one slice program
+        per ``(bucket, Q)`` pair.
+        """
+        q = int(jax.tree_util.tree_leaves(queries)[0].shape[0])
+        n = bucket_size(q, self.buckets)
+        padded = _pad_queries(queries, n, copy_exact=self.donate)
+        res = self._stats(self.params, padded)
+        mean, var, quantiles = (np.asarray(x) for x in res)
+        return ServeResult(mean=mean[:q], var=var[:q],
+                           quantiles=quantiles[:, :q])
+
+    __call__ = serve

@@ -112,6 +112,12 @@ class PolyRegression:
     def features(self, z: jnp.ndarray) -> jnp.ndarray:
         return jnp.stack([z, z**2, z**3, z**4], axis=-1)
 
+    def predict(self, w: jnp.ndarray, phi: jnp.ndarray) -> jnp.ndarray:
+        """Model forward on feature rows: ``phi @ coef + bias`` — the single
+        spelling of the w = [coef, bias] layout, shared by the training
+        potential and the serving path."""
+        return phi @ w[:4] + w[4]
+
     def sample_batch(self, key, n: int):
         kz, ke = jax.random.split(key)
         z = self.z_scale * jax.random.uniform(kz, (n,), minval=-1.0, maxval=1.0)
@@ -121,7 +127,7 @@ class PolyRegression:
 
     def value(self, w: jnp.ndarray, batch) -> jnp.ndarray:
         phi, y = batch
-        pred = phi @ w[:4] + w[4]
+        pred = self.predict(w, phi)
         fit = 0.5 / (self.nu_std**2) * jnp.mean((pred - y) ** 2)
         return fit + 0.5 * self.prior_prec * jnp.sum(w * w)
 

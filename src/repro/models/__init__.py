@@ -1,3 +1,8 @@
+from repro.models.predictive import (  # noqa: F401
+    mlp_predict,
+    regression_predict,
+    transformer_next_token_predict,
+)
 from repro.models.transformer import (  # noqa: F401
     Model,
     init_params,

@@ -1,0 +1,54 @@
+"""Predict-fn builders: adapt the repo's models to ``ServeEngine``'s
+per-chain forward contract ``(single-chain params, queries (Q, ...)) ->
+predictions (Q, ...)``.
+
+Each builder closes over the model/config and returns a pure function the
+engine vmaps over the chain axis, so Bayesian model averaging and credible
+intervals come from the same forward passes training used — the transformer
+builder goes through ``Model.prefill``, the entry point of the decode/serve
+path, not a parallel reimplementation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.models.mlp import apply_mlp
+
+PyTree = Any
+PredictFn = Callable[[PyTree, Any], jnp.ndarray]
+
+
+def regression_predict(reg) -> PredictFn:
+    """Posterior-predictive of :class:`~repro.core.potentials.PolyRegression`:
+    queries are raw inputs ``z (Q,)``, predictions ``phi(z)·w + b (Q,)``."""
+
+    def predict(w, z):
+        return reg.predict(w, reg.features(z))
+
+    return predict
+
+
+def mlp_predict(cfg) -> PredictFn:
+    """Feed-forward block as a regression head: queries ``x (Q, d_model)``,
+    predictions ``(Q, d_model)`` through :func:`~repro.models.mlp.apply_mlp`."""
+
+    def predict(params, x):
+        return apply_mlp(params, x, cfg)
+
+    return predict
+
+
+def transformer_next_token_predict(model) -> PredictFn:
+    """Next-token logits through the serving path: queries are a prompt batch
+    (``{"tokens": (Q, T)}``), predictions the last-position logits ``(Q, V)``
+    from :meth:`~repro.models.transformer.Model.prefill` — ensemble-averaging
+    them is Bayesian model averaging over the chain bank at decode time."""
+
+    def predict(params, batch):
+        logits, _ = model.prefill(params, batch)  # (Q, 1, V)
+        return logits[:, 0].astype(jnp.float32)
+
+    return predict

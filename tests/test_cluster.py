@@ -183,6 +183,7 @@ def test_explicit_batches_broadcast_even_with_batch_fn(quad_sampler):
     assert np.all(np.asarray(state.step) == 20)
 
 
+@pytest.mark.slow
 def test_ensemble_w2_measures_convergence_in_measure():
     """Overdispersed chain cloud contracts onto the Gibbs posterior: the
     empirical W2 (exact 1-D quantile estimator) must drop well below its
@@ -247,6 +248,7 @@ print(json.dumps({
 """
 
 
+@pytest.mark.slow
 def test_sharded_matches_unsharded_on_debug_mesh():
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT_SHARDED],
