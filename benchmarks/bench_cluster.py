@@ -10,6 +10,14 @@ baseline executes the barrier schedule (one update per round, round time =
 max over P workers) so both curves share a simulated wall-clock axis and a
 gradient-evaluation budget.
 
+The batch-policy sweep compares heterogeneous (inverse-speed) per-worker
+batch sizes against fixed-size minibatches **at an equal total
+gradient-evaluation budget** on an overhead-heavy heterogeneous pool: both
+arms run the masked bucket-padded executor path with linear step-size
+scaling, and the recorded frontier is W2 against cumulative grad evals and
+against simulated wall clock.  The run fails unless inverse-speed batching
+reaches the fixed arm's final W2 in less simulated wall clock.
+
 ``python benchmarks/bench_cluster.py [--smoke] [--out BENCH_cluster.json]``
 """
 
@@ -21,6 +29,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.cluster import (
     ClusterEngine,
@@ -30,7 +39,14 @@ from repro.cluster import (
     ensemble_w2,
     w2_recorder,
 )
-from repro.core import Quadratic, WorkerModel, simulate_sync, speedup_vs_sync
+from repro.core import (
+    Quadratic,
+    WorkerModel,
+    simulate_async,
+    simulate_sync,
+    speedup_vs_sync,
+    truncate_to_evals,
+)
 from repro import samplers
 
 
@@ -57,6 +73,111 @@ def _run_ensemble(sampler, schedule, *, num_chains, steps, chunk, target,
     state, _ = engine.run(state, steps=steps, schedule=schedule)
     jax.block_until_ready(state.params)
     return hook.record, time.time() - t0
+
+
+def _policy_curves(rec):
+    return {
+        "commits": [r["step"] for r in rec],
+        "grad_evals": [r["grad_evals"] for r in rec],
+        "sim_time": [r["commit_time"] for r in rec],
+        "w2": [r["w2"] for r in rec],
+    }
+
+
+def run_batch_policies(num_chains: int = 64, workers: int = 8,
+                       fixed_commits: int = 960, d: int = 2,
+                       gamma: float = 0.02, sigma: float = 0.5,
+                       base_batch: int = 8, noise_scale: float = 1.0,
+                       heterogeneity: float = 0.6, update_cost: float = 0.6,
+                       n_target: int = 256, seed: int = 0,
+                       chunks: int = 16) -> dict:
+    """Heterogeneous (inverse-speed) vs fixed batch sizes at an equal total
+    gradient-evaluation budget.
+
+    Both arms run the same masked bucket-padded path (the fixed arm through
+    ``batch_policy="explicit"`` at constant ``base_batch``), the same
+    per-example oracle — quadratic drift plus iid per-example gradient
+    noise, so batch size genuinely trades variance — and linear step-size
+    scaling ``gamma_k ∝ b_k``.  The pool is overhead-heavy and strongly
+    heterogeneous (default worker speeds spread 0.4..1.6, serialized commit
+    cost 0.6 of a mean step), where fixed small batches burn wall clock on
+    per-commit overhead while slow workers commit stale, high-variance
+    gradients.
+    """
+    quad = Quadratic.make(jax.random.PRNGKey(seed), d=d, m=1.0, L=3.0)
+    target = _target_samples(quad, sigma, n_target, seed + 1)
+    per_ex = lambda p, e: quad.grad(p, None) + noise_scale * e  # noqa: E731
+    data = np.asarray(jax.random.normal(jax.random.PRNGKey(seed + 3),
+                                        (8192, d)), np.float32)
+    wm = WorkerModel(num_workers=workers, heterogeneity=heterogeneity,
+                     update_cost=update_cost, seed=seed)
+    budget = fixed_commits * base_batch  # grad evals per chain
+
+    fixed_scheds = ensemble_async(wm, fixed_commits, num_chains, seed=seed,
+                                  batch_policy="fixed",
+                                  base_batch=base_batch)
+    het_traces = [truncate_to_evals(
+        simulate_async(wm, fixed_commits, seed=seed + c,
+                       batch_policy="inverse-speed", base_batch=base_batch),
+        budget) for c in range(num_chains)]
+    het_scheds = [WorkerSchedule.from_trace(t) for t in het_traces]
+    het_steps = min(len(s) for s in het_scheds)
+    tau = max(max(s.max_delay for s in fixed_scheds),
+              max(s.max_delay for s in het_scheds))
+
+    def arm(policy, scheds, steps, **run_kw):
+        sampler = samplers.sgld("consistent", per_ex, gamma=gamma,
+                                sigma=sigma, tau=max(tau, 1),
+                                base_batch=base_batch)
+        chunk = max(1, steps // chunks)
+        hook = w2_recorder(target, every=chunk, num_iters=100)
+        engine = ClusterEngine(sampler, num_chains=num_chains,
+                               chunk_size=chunk, batch_policy=policy,
+                               hooks=[hook])
+        state = engine.init(jnp.zeros(d), jax.random.PRNGKey(seed + 2),
+                            jitter=2.0)
+        t0 = time.time()
+        state, _ = engine.run(state, steps=steps, schedule=scheds, data=data,
+                              **run_kw)
+        jax.block_until_ready(state.params)
+        return hook.record, time.time() - t0
+
+    fixed_rec, fixed_dev_s = arm(
+        "explicit", fixed_scheds, fixed_commits,
+        batch_sizes=np.full(fixed_commits, base_batch))
+    het_rec, het_dev_s = arm("inverse-speed", het_scheds, het_steps)
+
+    final_w2_fixed = fixed_rec[-1]["w2"]
+    final_w2_het = het_rec[-1]["w2"]
+    wallclock_fixed = fixed_rec[-1]["commit_time"]
+    wallclock_het = het_rec[-1]["commit_time"]
+    # first simulated time at which the het arm's W2 drops to the fixed
+    # arm's final value — the W2-at-equal-wallclock headline
+    het_time_to_fixed_w2 = next(
+        (r["commit_time"] for r in het_rec if r["w2"] <= final_w2_fixed),
+        None)
+    advantage = (wallclock_fixed / het_time_to_fixed_w2
+                 if het_time_to_fixed_w2 else None)
+    return {
+        "config": {"num_chains": num_chains, "workers": workers,
+                   "fixed_commits": fixed_commits, "het_commits": het_steps,
+                   "base_batch": base_batch, "budget_grad_evals": budget,
+                   "heterogeneity": heterogeneity,
+                   "update_cost": update_cost, "d": d,
+                   "gamma": gamma, "sigma": sigma,
+                   "noise_scale": noise_scale, "seed": seed},
+        "fixed": _policy_curves(fixed_rec),
+        "inverse_speed": _policy_curves(het_rec),
+        "final_w2_fixed": final_w2_fixed,
+        "final_w2_het": final_w2_het,
+        "wallclock_fixed": wallclock_fixed,
+        "wallclock_het": wallclock_het,
+        "het_time_to_fixed_final_w2": het_time_to_fixed_w2,
+        "het_wallclock_advantage": (round(advantage, 3) if advantage
+                                    else None),
+        "device_wall_s": {"fixed": round(fixed_dev_s, 3),
+                          "het": round(het_dev_s, 3)},
+    }
 
 
 def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
@@ -112,6 +233,7 @@ def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
 
 def _row(result: dict) -> dict:
     us = result["device_wall_s"]["async"] / result["config"]["commits"] * 1e6
+    bp = result.get("batch_policy", {})
     return {
         "bench": "cluster", "us_per_call": round(us, 1),
         "chains": result["config"]["num_chains"],
@@ -119,14 +241,24 @@ def _row(result: dict) -> dict:
         "speedup_vs_sync": result["speedup_vs_sync"],
         "final_w2_async": round(result["final_w2_async"], 4),
         "final_w2_sync": round(result["final_w2_sync"], 4),
+        "het_wallclock_advantage": bp.get("het_wallclock_advantage"),
     }
 
 
 SMOKE_KW = dict(num_chains=8, workers=4, commits=240, chunks=24, n_target=128)
+SMOKE_POLICY_KW = dict(num_chains=8, workers=4, fixed_commits=240, chunks=24,
+                       n_target=128)
+
+
+def full(fast: bool = True) -> dict:
+    result = run(**(SMOKE_KW if fast else {}))
+    result["batch_policy"] = run_batch_policies(
+        **(SMOKE_POLICY_KW if fast else {}))
+    return result
 
 
 def main(fast: bool = True):
-    return [_row(run(**(SMOKE_KW if fast else {})))]
+    return [_row(full(fast))]
 
 
 if __name__ == "__main__":
@@ -135,10 +267,23 @@ if __name__ == "__main__":
                     help="CI-sized run (8 chains, 240 commits)")
     ap.add_argument("--out", default="BENCH_cluster.json")
     args = ap.parse_args()
-    result = run(**(SMOKE_KW if args.smoke else {}))
+    result = full(args.smoke)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(_row(result)))
+    bp = result["batch_policy"]
+    print(f"batch policies at {bp['config']['budget_grad_evals']} grad evals"
+          f"/chain: fixed W2 {bp['final_w2_fixed']:.4f} in "
+          f"{bp['wallclock_fixed']:.1f} sim-units, inverse-speed W2 "
+          f"{bp['final_w2_het']:.4f} in {bp['wallclock_het']:.1f} "
+          f"(reached fixed's final W2 at "
+          f"{bp['het_time_to_fixed_final_w2'] or float('nan'):.1f}; "
+          f"advantage {bp['het_wallclock_advantage']}x)")
     print(f"wrote {args.out}")
     if result["speedup_vs_sync"] <= 1.0:
         raise SystemExit("async-vs-sync speedup did not exceed 1")
+    adv = bp["het_wallclock_advantage"]
+    if adv is None or adv <= 1.0:
+        raise SystemExit(
+            "inverse-speed batching did not reach the fixed-batch final W2 "
+            f"in less simulated wall clock (advantage {adv})")

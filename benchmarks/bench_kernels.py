@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.sgld import apply_update, langevin_noise
 from repro.kernels.ref import langevin_update_ref, delay_gather_ref

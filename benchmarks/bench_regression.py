@@ -6,7 +6,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 from repro.experiments import run_regression_experiment
 

@@ -11,7 +11,6 @@ available, and always prints the summary table.
 import argparse
 import os
 
-import numpy as np
 
 from repro.experiments import run_regression_experiment
 

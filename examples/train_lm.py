@@ -9,7 +9,6 @@ checkpointing and a final decode sanity check.  Modes: sync (paper baseline)
 """
 
 import argparse
-import os
 import time
 
 import jax

@@ -1,22 +1,38 @@
-"""CI perf-regression gate for the cluster benchmark.
+"""CI perf-regression gates for the cluster and serve benchmarks.
 
-Compares a freshly produced ``BENCH_cluster.json`` against the committed
-baseline (``benchmarks/baselines/BENCH_cluster.json``) inside a tolerance
-band and exits non-zero on regression, so the ``bench-smoke`` job *fails*
-instead of merely uploading an artifact:
+Compares a freshly produced ``BENCH_cluster.json`` / ``BENCH_serve.json``
+against the committed baseline under ``benchmarks/baselines/`` inside a
+tolerance band and exits non-zero on regression, so the ``bench-smoke`` and
+``serve-smoke`` jobs *fail* instead of merely uploading an artifact.  The
+payload kind is detected from its contents (a serve payload carries
+``rows``).
+
+Cluster gate (simulated, machine-independent — keep the bands tight):
 
 - ``speedup_vs_sync`` (async-vs-sync at equal gradient evaluations) may not
   fall more than ``--tol-speedup`` below the baseline, and must stay > 1;
-- W2-at-budget (``final_w2_async``, the chain cloud's empirical W2 against
-  the Gibbs posterior after the full commit budget) may not rise more than
-  ``--tol-w2`` above the baseline.
+- W2-at-budget (``final_w2_async``) may not rise more than ``--tol-w2``
+  above the baseline;
+- ``batch_policy.het_wallclock_advantage`` (inverse-speed batching reaching
+  the fixed-batch final W2 at equal grad evals) must stay > 1.
 
-Both runs are seeded, so the bands only absorb cross-platform float noise —
-keep them tight.  To accept an intentional change, re-run the benchmark and
-commit the new JSON as the baseline.
+Serve gate (wall-clock, machine-dependent — the bands are wide because CI
+runners differ in absolute throughput; order-of-magnitude regressions, e.g.
+a retrace slipping into the request stream, still trip them):
+
+- per (chains, shards) row, QPS may not fall below
+  ``baseline * (1 - tol_qps)``;
+- p99 latency may not rise above ``baseline * (1 + tol_p99)``;
+- ``retraced_in_stream`` must stay False (exact, no band);
+- every baseline row must still be present.
+
+To accept an intentional change, re-run the benchmark and commit the new
+JSON as the baseline.
 
     python scripts/check_bench.py BENCH_cluster.json \
         --baseline benchmarks/baselines/BENCH_cluster.json
+    python scripts/check_bench.py BENCH_serve.json \
+        --baseline benchmarks/baselines/BENCH_serve.json
 """
 
 from __future__ import annotations
@@ -26,9 +42,9 @@ import json
 import sys
 
 
-def check(current: dict, baseline: dict, *, tol_speedup: float,
-          tol_w2: float) -> list[str]:
-    """Returns a list of human-readable regression messages (empty = pass)."""
+def check_cluster(current: dict, baseline: dict, *, tol_speedup: float,
+                  tol_w2: float) -> list[str]:
+    """Cluster-bench regressions (empty list = pass)."""
     failures = []
     sp, sp0 = current["speedup_vs_sync"], baseline["speedup_vs_sync"]
     floor = sp0 * (1.0 - tol_speedup)
@@ -44,18 +60,94 @@ def check(current: dict, baseline: dict, *, tol_speedup: float,
         failures.append(
             f"W2-at-budget regressed: {w2:.4f} > {ceil:.4f} "
             f"(baseline {w20:.4f}, tolerance {tol_w2:.0%})")
+    bp = current.get("batch_policy")
+    if bp is not None:
+        adv = bp.get("het_wallclock_advantage")
+        if adv is None or adv <= 1.0:
+            failures.append(
+                "inverse-speed batching lost its wall-clock advantage at "
+                f"equal grad evals (het_wallclock_advantage {adv})")
     return failures
+
+
+def _serve_rows(payload: dict) -> dict:
+    return {(r["chains"], r["shards"]): r for r in payload["rows"]}
+
+
+def check_serve(current: dict, baseline: dict, *, tol_qps: float,
+                tol_p99: float) -> list[str]:
+    """Serve-bench regressions (empty list = pass)."""
+    failures = []
+    cur = _serve_rows(current)
+    for key, row0 in _serve_rows(baseline).items():
+        chains, shards = key
+        label = f"chains={chains} shards={shards}"
+        row = cur.get(key)
+        if row is None:
+            failures.append(f"{label}: row missing from the fresh benchmark")
+            continue
+        floor = row0["qps"] * (1.0 - tol_qps)
+        if row["qps"] < floor:
+            failures.append(
+                f"{label}: QPS regressed: {row['qps']:.1f} < {floor:.1f} "
+                f"(baseline {row0['qps']:.1f}, tolerance {tol_qps:.0%})")
+        ceil = row0["p99_ms"] * (1.0 + tol_p99)
+        if row["p99_ms"] > ceil:
+            failures.append(
+                f"{label}: p99 latency regressed: {row['p99_ms']:.3f}ms > "
+                f"{ceil:.3f}ms (baseline {row0['p99_ms']:.3f}ms, "
+                f"tolerance {tol_p99:.0%})")
+        if row.get("retraced_in_stream"):
+            failures.append(
+                f"{label}: serve path retraced inside the request stream "
+                "(more than one trace per shape bucket)")
+    return failures
+
+
+def check(current: dict, baseline: dict, *, tol_speedup: float = 0.20,
+          tol_w2: float = 0.50, tol_qps: float = 0.75,
+          tol_p99: float = 4.0) -> list[str]:
+    """Returns human-readable regression messages (empty = pass); dispatches
+    on the payload kind (serve payloads carry ``rows``)."""
+    if "rows" in current:
+        return check_serve(current, baseline, tol_qps=tol_qps,
+                           tol_p99=tol_p99)
+    return check_cluster(current, baseline, tol_speedup=tol_speedup,
+                         tol_w2=tol_w2)
+
+
+def _summary(current: dict, baseline: dict) -> str:
+    if "rows" in current:
+        cur, base = _serve_rows(current), _serve_rows(baseline)
+        parts = []
+        for key in sorted(base):
+            c, b = cur.get(key), base[key]
+            got = (f"qps {c['qps']:.0f} p99 {c['p99_ms']:.2f}ms" if c
+                   else "MISSING")
+            parts.append(f"chains={key[0]} shards={key[1]}: {got} "
+                         f"(baseline qps {b['qps']:.0f} "
+                         f"p99 {b['p99_ms']:.2f}ms)")
+        return "\n".join(parts)
+    return (f"speedup_vs_sync {current['speedup_vs_sync']:.3f} "
+            f"(baseline {baseline['speedup_vs_sync']:.3f}), "
+            f"final_w2_async {current['final_w2_async']:.4f} "
+            f"(baseline {baseline['final_w2_async']:.4f})")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("bench", help="fresh BENCH_cluster.json to validate")
+    ap.add_argument("bench", help="fresh BENCH_*.json to validate")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/BENCH_cluster.json")
     ap.add_argument("--tol-speedup", type=float, default=0.20,
                     help="allowed fractional speedup drop (default 0.20)")
     ap.add_argument("--tol-w2", type=float, default=0.50,
                     help="allowed fractional W2 increase (default 0.50)")
+    ap.add_argument("--tol-qps", type=float, default=0.75,
+                    help="allowed fractional QPS drop (default 0.75 — wide, "
+                    "absolute throughput is machine-dependent)")
+    ap.add_argument("--tol-p99", type=float, default=4.0,
+                    help="allowed fractional p99 increase (default 4.0)")
     args = ap.parse_args(argv)
 
     with open(args.bench) as f:
@@ -70,11 +162,9 @@ def main(argv=None) -> int:
               "comparing anyway; recommit the baseline if intentional")
 
     failures = check(current, baseline, tol_speedup=args.tol_speedup,
-                     tol_w2=args.tol_w2)
-    print(f"speedup_vs_sync {current['speedup_vs_sync']:.3f} "
-          f"(baseline {baseline['speedup_vs_sync']:.3f}), "
-          f"final_w2_async {current['final_w2_async']:.4f} "
-          f"(baseline {baseline['final_w2_async']:.4f})")
+                     tol_w2=args.tol_w2, tol_qps=args.tol_qps,
+                     tol_p99=args.tol_p99)
+    print(_summary(current, baseline))
     for msg in failures:
         print(f"REGRESSION: {msg}")
     if not failures:

@@ -16,8 +16,9 @@ from repro.cluster.ensemble import (  # noqa: F401
     ensemble_w2,
     init_ensemble,
     w2_recorder,
+    worker_keys,
 )
-from repro.cluster.executor import ClusterEngine  # noqa: F401
+from repro.cluster.executor import BATCH_POLICIES, ClusterEngine  # noqa: F401
 from repro.cluster.serve import (  # noqa: F401
     ServeEngine,
     ServeResult,
@@ -28,5 +29,7 @@ from repro.cluster.schedule import (  # noqa: F401
     StalenessError,
     WorkerSchedule,
     ensemble_async,
+    stack_batch_info,
     stack_schedules,
+    stack_worker_info,
 )

@@ -62,14 +62,49 @@ def init_ensemble(sampler: Sampler, params: PyTree, key: jax.Array | None = None
     return jax.vmap(sampler.init)(stacked, keys)
 
 
-def ensemble_step(sampler: Sampler, *, batch_axis: Optional[int] = None
-                  ) -> Callable:
+#: fold_in tags separating the worker-attributed noise and coordinate-delay
+#: streams (arbitrary distinct constants, fixed forever for reproducibility)
+_WORKER_NOISE_TAG = 0x5747_4E01
+_WORKER_DELAY_TAG = 0x5747_4401
+
+
+def worker_keys(chain_key: jax.Array, worker_id: jax.Array,
+                slot: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-commit ``(noise, coordinate-delay)`` keys derived from the chain
+    key and the commit's ``(worker_id, worker-local slot)`` identity.
+
+    Unlike the default sequential split off the carried chain key, this
+    stream depends only on *which worker* made *its how-manieth* commit —
+    permuting the global commit order (two simulations interleaving the same
+    worker histories differently) permutes the noise draws with it instead
+    of redrawing them, so each worker's noise stream is reproducible
+    independently of commit order."""
+    k_noise = jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(chain_key, _WORKER_NOISE_TAG),
+                           worker_id), slot)
+    k_delay = jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(chain_key, _WORKER_DELAY_TAG),
+                           worker_id), slot)
+    return k_noise, k_delay
+
+
+def ensemble_step(sampler: Sampler, *, batch_axis: Optional[int] = None,
+                  worker_rng: bool = False) -> Callable:
     """The population commit: ``step`` vmapped over (state, batch?, delay).
 
     ``batch_axis=None`` broadcasts one batch to every chain (chains then
     differ only through their keys and schedules — the parity configuration);
-    ``batch_axis=0`` gives each chain its own minibatch.
+    ``batch_axis=0`` gives each chain its own minibatch.  With
+    ``worker_rng`` the returned callable takes two extra per-chain arrays
+    ``(worker_id, slot)`` and derives the per-commit keys with
+    :func:`worker_keys` instead of the sequential split.
     """
+    if worker_rng:
+        def step_attributed(state, batch, delay, worker_id, slot):
+            return sampler.step(state, batch, delay,
+                                keys=worker_keys(state.key, worker_id, slot))
+
+        return jax.vmap(step_attributed, in_axes=(0, batch_axis, 0, 0, 0))
     return jax.vmap(sampler.step, in_axes=(0, batch_axis, 0))
 
 
@@ -109,24 +144,30 @@ def w2_recorder(target_samples: jnp.ndarray, *, every: int = 1,
     """A :class:`~repro.train.engine.Engine`-style hook measuring empirical
     W2 of the chain cloud every ``every`` commits.
 
-    Rows land in ``hook.record`` as ``{"step", "w2", "commit_time"}``;
-    ``commit_time`` is the ensemble wall clock (max over chains) when the
-    executor threads schedule times into the aux, else ``None``.
+    Rows land in ``hook.record`` as ``{"step", "w2", "commit_time",
+    "grad_evals"}``; ``commit_time`` is the ensemble wall clock (max over
+    chains) and ``grad_evals`` the cumulative gradient-evaluation count
+    (mean over chains) when the executor threads them into the aux, else
+    ``None``.
     """
     record: list[dict] = []
     last = [-every]
-    seen_time = [None]  # newest commit time, even across skipped chunks
+    seen_time = [None]   # newest commit time, even across skipped chunks
+    seen_evals = [None]  # newest cumulative grad evals
 
     def measure(step_end: int, state: SamplerState) -> None:
         last[0] = step_end
         w2 = float(ensemble_w2(chain_positions(state.params), target_samples,
                                **w2_kw))
         record.append({"step": step_end, "w2": w2,
-                       "commit_time": seen_time[0]})
+                       "commit_time": seen_time[0],
+                       "grad_evals": seen_evals[0]})
 
     def hook(step_end: int, state: SamplerState, aux) -> None:
         if isinstance(aux, dict) and "commit_time" in aux:
             seen_time[0] = float(np.max(np.asarray(aux["commit_time"])[-1]))
+        if isinstance(aux, dict) and "grad_evals" in aux:
+            seen_evals[0] = float(np.mean(np.asarray(aux["grad_evals"])[-1]))
         if step_end - last[0] >= every:
             measure(step_end, state)
 

@@ -14,6 +14,17 @@ side-channel.  With ``mesh=`` the chunk body runs under the repo's
 ``shard_map`` compat shim with chains split over the ``data`` axis — pure
 SPMD, no cross-chain communication, so per-chain trajectories are identical
 sharded or not.
+
+Batch sizes are part of the schedule: under ``batch_policy="inverse-speed"``
+(or ``"explicit"``) every commit carries its own minibatch size and data
+offset, and the scan body gathers a *bucket-padded* window from the ``data``
+stream — each chunk pads to the bucket-ladder rung of its largest commit,
+so a mixed-size schedule compiles **one trace per rung**, never one per
+size (the discipline :class:`~repro.cluster.serve.ServeEngine` applies to
+query batches).  The mask (:class:`~repro.samplers.transforms.MaskedBatch`)
+keeps padding rows out of the gradient average.  The default
+``batch_policy="fixed"`` is the legacy fixed-shape path, bit-identical to
+the pre-heterogeneous executor.
 """
 
 from __future__ import annotations
@@ -27,11 +38,18 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.cluster.ensemble import ensemble_step, init_ensemble
-from repro.cluster.schedule import WorkerSchedule, stack_schedules
+from repro.cluster.schedule import (
+    WorkerSchedule,
+    stack_batch_info,
+    stack_schedules,
+    stack_worker_info,
+)
 from repro.core.delay import validate_staleness
+from repro.core.delay_model import BATCH_POLICIES
 from repro.samplers.base import Sampler, SamplerState
+from repro.samplers.transforms import MaskedBatch
 from repro.train.engine import Hook, drive_chunks
-from repro.utils import SHARD_MAP_CHECK_KW, shard_map
+from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
 
 PyTree = Any
 BatchFn = Callable[[jax.Array], PyTree]  # key -> one chain's batch (pure jax)
@@ -50,6 +68,30 @@ class ClusterEngine:
     (then their second axis is the chain axis).  ``mesh`` shards the chain
     axis over ``chain_axis`` (``num_chains`` must be divisible by that mesh
     axis size).
+
+    ``batch_policy`` selects how commits consume data:
+
+    - ``"fixed"`` (default): one fixed-shape minibatch per commit — the
+      legacy contract, bit-identical to the pre-heterogeneous executor.
+    - ``"inverse-speed"``: per-commit sizes come from the schedule's
+      ``batch_sizes`` (compiled from a
+      :meth:`WorkerModel.batch_sizes <repro.core.delay_model.WorkerModel>`
+      policy: slow workers amortize staleness over large batches); commits
+      consume bucket-padded masked windows of the ``data=`` stream passed to
+      :meth:`run`.
+    - ``"explicit"``: like inverse-speed, but sizes come from the
+      ``batch_sizes=`` array passed to :meth:`run` (snapped up the
+      ``buckets`` ladder).
+
+    The sampler must use the per-example masked-oracle contract for the
+    non-fixed policies (``samplers.sgld(..., base_batch=...)`` or a chain
+    containing :func:`~repro.samplers.transforms.masked_gradients`).
+
+    ``worker_rng`` derives each commit's noise key from
+    ``(chain key, worker_id, worker-local slot)`` instead of the carried
+    sequential split, making every worker's noise stream reproducible
+    independently of commit order (see
+    :func:`~repro.cluster.ensemble.worker_keys`).
     """
 
     sampler: Sampler
@@ -62,6 +104,9 @@ class ClusterEngine:
     per_chain_batches: bool = False
     mesh: Any = None
     chain_axis: str = "data"
+    batch_policy: str = "fixed"
+    buckets: Optional[Sequence[int]] = None
+    worker_rng: bool = False
 
     num_traces: int = field(default=0, init=False)  # jit retrace counter
 
@@ -70,6 +115,13 @@ class ClusterEngine:
             raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
         if self.num_chains < 1:
             raise ValueError(f"num_chains must be >= 1, got {self.num_chains}")
+        if self.batch_policy not in BATCH_POLICIES:
+            raise ValueError(f"unknown batch_policy {self.batch_policy!r} "
+                             f"(choose from {BATCH_POLICIES})")
+        if self.batch_policy != "fixed" and self.batch_fn is not None:
+            raise ValueError(
+                "batch_fn generates fixed-shape minibatches; heterogeneous "
+                "batch policies consume a `data=` stream passed to run()")
         if self.mesh is not None:
             n_shards = self.mesh.shape[self.chain_axis]
             if self.num_chains % n_shards:
@@ -80,24 +132,34 @@ class ClusterEngine:
         # get traced/compiled (the counter they bump is shared)
         self._chunk_shared = self._build_chunk(batch_axis=None)
         self._chunk_per_chain = self._build_chunk(batch_axis=0)
+        self._masked_chunks: dict = {}  # pad width -> jitted masked chunk
         self._make_batches = (jax.jit(jax.vmap(jax.vmap(self.batch_fn)))
                               if self.batch_fn is not None else None)
+
+    def _step_fn(self, batch_axis: Optional[int]):
+        return ensemble_step(self.sampler, batch_axis=batch_axis,
+                             worker_rng=self.worker_rng)
+
+    def _step_args(self, s, batch, delay, ex):
+        if self.worker_rng:
+            return (s, batch, delay, ex["wid"], ex["slot"])
+        return (s, batch, delay)
 
     def _build_chunk(self, batch_axis: Optional[int]):
         """Jitted scan over one chunk; ``batch_axis=0`` vmaps the batch over
         the chain axis, ``None`` broadcasts one batch to every chain."""
 
-        def chunk(state, batches, read_versions):
+        def chunk(state, batches, extra):
             self.num_traces += 1  # python side effect: counts traces
-            step_fn = ensemble_step(self.sampler, batch_axis=batch_axis)
+            step_fn = self._step_fn(batch_axis)
 
             def body(s, inp):
-                batch, rv = inp
-                delay = s.step.astype(jnp.int32) - rv  # endogenous staleness
-                s, aux = step_fn(s, batch, delay)
+                batch, ex = inp
+                delay = s.step.astype(jnp.int32) - ex["rv"]  # endogenous
+                s, aux = step_fn(*self._step_args(s, batch, delay, ex))
                 return s, (aux if self.collect_aux else None)
 
-            return jax.lax.scan(body, state, (batches, read_versions))
+            return jax.lax.scan(body, state, (batches, extra))
 
         if self.mesh is not None:
             ax = self.chain_axis
@@ -107,6 +169,47 @@ class ClusterEngine:
                               out_specs=(P(ax), P(None, ax)),
                               **SHARD_MAP_CHECK_KW)
         return jax.jit(chunk, donate_argnums=(0,) if self.donate else ())
+
+    def _build_masked_chunk(self, pad: int):
+        """Jitted scan whose per-step batch is a bucket-padded masked window
+        of the data stream: ``pad`` is the chunk's ladder rung (static —
+        one trace per rung), ``extra`` carries per-(step, chain) data
+        offsets and real sizes, and the gather wraps modulo the stream
+        length so offsets never index out of bounds."""
+
+        def chunk(state, data, extra):
+            self.num_traces += 1  # python side effect: counts traces
+            step_fn = self._step_fn(0)
+            n_data = jax.tree_util.tree_leaves(data)[0].shape[0]
+
+            def window(off):  # () int32 -> (pad, ...) rows, wrapped
+                idx = jax.lax.rem(off + jnp.arange(pad, dtype=jnp.int32),
+                                  n_data)
+                return jax.tree_util.tree_map(
+                    lambda x: jnp.take(x, idx, axis=0), data)
+
+            def body(s, ex):
+                batch = MaskedBatch(data=jax.vmap(window)(ex["off"]),
+                                    size=ex["size"])
+                delay = s.step.astype(jnp.int32) - ex["rv"]  # endogenous
+                s, aux = step_fn(*self._step_args(s, batch, delay, ex))
+                return s, (aux if self.collect_aux else None)
+
+            return jax.lax.scan(body, state, extra)
+
+        if self.mesh is not None:
+            ax = self.chain_axis
+            chunk = shard_map(chunk, mesh=self.mesh,
+                              in_specs=(P(ax), P(), P(None, ax)),
+                              out_specs=(P(ax), P(None, ax)),
+                              **SHARD_MAP_CHECK_KW)
+        return jax.jit(chunk, donate_argnums=(0,) if self.donate else ())
+
+    def _run_masked_chunk(self, state, data, extra, pad: int):
+        fn = self._masked_chunks.get(pad)
+        if fn is None:
+            fn = self._masked_chunks[pad] = self._build_masked_chunk(pad)
+        return fn(state, data, extra)
 
     # -- init -----------------------------------------------------------------
     def init(self, params: PyTree, key: jax.Array, *,
@@ -133,36 +236,79 @@ class ClusterEngine:
 
     # -- schedule normalization ------------------------------------------------
     def _compile_schedule(self, schedule: ScheduleLike, steps: int):
-        """-> (read_versions (steps, C) int32, commit_times (steps, C) | None)."""
+        """-> (extra dict of (steps, C) host arrays, commit_times | None,
+        batch_info (sizes, offsets) | None).
+
+        ``extra`` always carries ``rv`` (read versions); ``wid``/``slot``
+        (worker attribution) join it under ``worker_rng``.
+        """
         c = self.num_chains
-        if schedule is None:
-            k = np.arange(steps, dtype=np.int32)[:, None]  # fresh reads, tau=0
-            return np.tile(k, (1, c)), None
         raw_delays = isinstance(schedule, (np.ndarray, jnp.ndarray))
-        if raw_delays:
+        if schedule is None:
+            scheds = [WorkerSchedule.sync(steps)] * c
+        elif raw_delays:
             arr = np.asarray(schedule)
             if arr.ndim == 1:
-                schedule = WorkerSchedule.from_delays(arr)
+                scheds = [WorkerSchedule.from_delays(arr)] * c
             elif arr.ndim == 2:
-                schedule = [WorkerSchedule.from_delays(arr[:, i])
-                            for i in range(arr.shape[1])]
+                scheds = [WorkerSchedule.from_delays(arr[:, i])
+                          for i in range(arr.shape[1])]
             else:
                 raise ValueError("delay array must be (steps,) or (steps, C)")
-        scheds = ([schedule] * c if isinstance(schedule, WorkerSchedule)
-                  else list(schedule))
+        else:
+            scheds = ([schedule] * c if isinstance(schedule, WorkerSchedule)
+                      else list(schedule))
         if len(scheds) != c:
             raise ValueError(f"got {len(scheds)} per-chain schedules for "
                              f"{c} chains")
         rv, times = stack_schedules(scheds, steps=steps)
-        # raw delay arrays carry no wall-clock information; don't present
-        # from_delays' synthetic arange times as simulated commit times
-        return rv, (None if raw_delays else times)
+        extra = {"rv": rv}
+        if self.worker_rng:
+            wid, slot = stack_worker_info(scheds, steps)
+            extra["wid"], extra["slot"] = wid, slot
+        # synthetic schedules (sync default, raw delay arrays) carry no
+        # wall-clock information; don't present arange times as simulated
+        times = None if (schedule is None or raw_delays) else times
+        return extra, times, stack_batch_info(scheds, steps)
+
+    def _compile_batch_plan(self, batch_info, batch_sizes, steps: int):
+        """-> ((steps, C) int32 sizes, (steps, C) int64 offsets) for the
+        masked path, honoring the engine's batch policy."""
+        if self.batch_policy == "explicit":
+            if batch_sizes is None:
+                raise ValueError(
+                    'batch_policy="explicit" needs batch_sizes= '
+                    "((steps,) or (steps, C)) passed to run()")
+            sizes = np.asarray(batch_sizes, np.int64)
+            if sizes.ndim == 0:
+                sizes = np.full((steps,), int(sizes), np.int64)
+            if sizes.ndim == 1:
+                sizes = np.tile(sizes[:, None], (1, self.num_chains))
+            if sizes.shape[0] < steps:
+                raise ValueError(f"batch_sizes has {sizes.shape[0]} entries, "
+                                 f"need {steps}")
+            sizes = sizes[:steps]
+            snap = np.vectorize(lambda b: bucket_size(int(b), self.buckets))
+            sizes = snap(sizes).astype(np.int32)
+            offs = np.zeros_like(sizes, dtype=np.int64)
+            np.cumsum(sizes[:-1].astype(np.int64), axis=0, out=offs[1:])
+            return sizes, offs
+        # inverse-speed: the schedule is the plan, offsets included
+        if batch_info is None:
+            raise ValueError(
+                'batch_policy="inverse-speed" needs schedules carrying '
+                'batch_sizes (ensemble_async(..., '
+                'batch_policy="inverse-speed") or '
+                "WorkerSchedule.with_batch_sizes)")
+        return batch_info
 
     # -- host driver ----------------------------------------------------------
     def run(self, state: SamplerState, *, steps: int,
             schedule: ScheduleLike = None,
             batches: Optional[PyTree] = None,
-            key: Optional[jax.Array] = None):
+            key: Optional[jax.Array] = None,
+            data: Optional[PyTree] = None,
+            batch_sizes: Optional[np.ndarray] = None):
         """Advance every chain ``steps`` commits under ``schedule``.
 
         ``schedule`` may be one :class:`WorkerSchedule` (broadcast), a
@@ -171,17 +317,59 @@ class ClusterEngine:
         Returns ``(state, aux)`` with aux stacked ``(steps, C, ...)`` when
         ``collect_aux`` (plus ``commit_times`` threaded into hook aux when
         the schedule carries them).
+
+        Under a non-fixed ``batch_policy``, ``data=`` is the shared example
+        stream (pytree, leading axis = rows): commit ``k`` of chain ``c``
+        consumes rows ``[offset, offset + size)`` — offsets wrap modulo the
+        stream length, and restart at 0 on every :meth:`run` call — as a
+        bucket-padded :class:`~repro.samplers.transforms.MaskedBatch`, and
+        cumulative ``grad_evals`` are threaded into the hook aux next to
+        ``commit_time``.
         """
-        read_versions, commit_times = self._compile_schedule(schedule, steps)
+        extra, commit_times, batch_info = self._compile_schedule(schedule,
+                                                                 steps)
         max_delay = int((np.arange(steps, dtype=np.int64)[:, None]
-                         - read_versions).max(initial=0))
+                         - extra["rv"]).max(initial=0))
         validate_staleness(max_delay, state.inner, context="schedule")
         # schedule versions are relative to this run's first commit; rebase
         # onto the state's commit counter so continuation runs keep the
         # endogenous staleness (step - read_version) equal to the schedule's
         # tau_k instead of silently clamping at the ring depth.
-        read_versions = jnp.asarray(
-            read_versions + np.asarray(state.step)[None, :], jnp.int32)
+        extra["rv"] = jnp.asarray(
+            extra["rv"] + np.asarray(state.step)[None, :], jnp.int32)
+        if self.worker_rng:
+            # worker slots are schedule-relative too; rebase them the same
+            # way so a continuation run folds fresh (wid, slot) pairs into
+            # the noise keys instead of replaying the previous run's draws
+            # (the carried chain key is deliberately untouched in this mode)
+            extra["slot"] = jnp.asarray(
+                extra["slot"] + np.asarray(state.step)[None, :], jnp.int32)
+
+        if self.batch_policy != "fixed":
+            if data is None:
+                raise ValueError(f"batch_policy={self.batch_policy!r} needs "
+                                 "a data= example stream passed to run()")
+            if batches is not None:
+                raise ValueError("pass either data= (heterogeneous masked "
+                                 "windows) or batches=, not both")
+            sizes, offs = self._compile_batch_plan(batch_info, batch_sizes,
+                                                   steps)
+            n_data = int(jax.tree_util.tree_leaves(data)[0].shape[0])
+            extra["size"] = sizes
+            extra["off"] = (offs % n_data).astype(np.int32)
+            evals = np.cumsum(sizes.astype(np.int64), axis=0)
+
+            def chunk_info(done: int, n: int):
+                rung = bucket_size(int(sizes[done:done + n].max()),
+                                   self.buckets)
+                return (rung,)
+
+            return drive_chunks(
+                self._run_masked_chunk, state, steps=steps,
+                chunk_size=self.chunk_size, hooks=self.hooks,
+                collect_aux=self.collect_aux, extra=extra, batches=data,
+                slice_batches=False, chunk_info=chunk_info,
+                commit_times=commit_times, host_aux={"grad_evals": evals})
 
         # explicit batches follow the per_chain_batches contract; generated
         # ones always carry a chain axis (one key per (step, chain))
@@ -199,6 +387,6 @@ class ClusterEngine:
         return drive_chunks(
             run_chunk, state, steps=steps, chunk_size=self.chunk_size,
             hooks=self.hooks, collect_aux=self.collect_aux,
-            extra=read_versions, batches=batches,
+            extra=extra, batches=batches,
             gen_batches=gen_batches if self._make_batches is not None else None,
             key=key, commit_times=commit_times)

@@ -31,21 +31,40 @@ import numpy as np
 from repro.core.delay import StalenessError  # noqa: F401  (re-exported)
 from repro.core.delay import check_staleness_fits
 from repro.core.delay_model import DelayTrace, WorkerModel, simulate_async
+from repro.utils import bucket_size
 
 
 @dataclass(frozen=True)
 class WorkerSchedule:
-    """One chain's compiled commit schedule (trace order = commit order)."""
+    """One chain's compiled commit schedule (trace order = commit order).
+
+    ``batch_sizes`` (optional) is the bucketed per-commit minibatch size —
+    how much data the committing worker averaged its delayed gradient over.
+    The compiled form also carries :attr:`data_offsets`: commit ``k``
+    consumes rows ``[offset_k, offset_k + batch_sizes[k])`` of the chain's
+    data stream, so the executor's padded windowed gather needs no host
+    bookkeeping.
+    """
 
     read_versions: np.ndarray  # (num_commits,) int32: server version each read saw
     worker_ids: np.ndarray     # (num_commits,) int32: which worker committed
     commit_times: np.ndarray   # (num_commits,) float64: simulated wall clock
     num_workers: int
+    batch_sizes: np.ndarray | None = None  # (num_commits,) int32 per commit
 
     def __post_init__(self):
         k = np.arange(len(self.read_versions))
         if np.any(self.read_versions < 0) or np.any(self.read_versions > k):
             raise ValueError("read_versions must satisfy 0 <= v_read[k] <= k")
+        if self.batch_sizes is not None:
+            sizes = np.asarray(self.batch_sizes, np.int32)
+            if sizes.shape != self.read_versions.shape:
+                raise ValueError(
+                    f"batch_sizes shape {sizes.shape} must match "
+                    f"read_versions shape {self.read_versions.shape}")
+            if np.any(sizes < 1):
+                raise ValueError("batch_sizes must be >= 1 per commit")
+            object.__setattr__(self, "batch_sizes", sizes)
 
     def __len__(self) -> int:
         return int(self.read_versions.shape[0])
@@ -60,13 +79,45 @@ class WorkerSchedule:
     def max_delay(self) -> int:
         return int(self.delays.max(initial=0))
 
+    @property
+    def data_offsets(self) -> np.ndarray | None:
+        """Per-commit start row in the chain's data stream: the exclusive
+        cumulative sum of ``batch_sizes`` (``None`` without sizes)."""
+        if self.batch_sizes is None:
+            return None
+        offs = np.zeros(len(self), np.int64)
+        np.cumsum(self.batch_sizes[:-1], out=offs[1:])
+        return offs
+
+    @property
+    def worker_slots(self) -> np.ndarray:
+        """Worker-local commit index: commit ``k`` is the ``slots[k]``-th
+        commit of worker ``worker_ids[k]``.  The pair ``(worker_id, slot)``
+        identifies a commit independently of global commit order — the key
+        the per-worker RNG attribution folds into the noise stream."""
+        slots = np.zeros(len(self), np.int32)
+        counts: dict[int, int] = {}
+        for k, w in enumerate(np.asarray(self.worker_ids)):
+            slots[k] = counts.get(int(w), 0)
+            counts[int(w)] = slots[k] + 1
+        return slots
+
+    @property
+    def grad_evals(self) -> np.ndarray:
+        """Cumulative gradient evaluations after each commit (inclusive) —
+        the equal-compute axis for comparing batch policies."""
+        if self.batch_sizes is None:
+            return np.arange(1, len(self) + 1, dtype=np.int64)
+        return np.cumsum(self.batch_sizes.astype(np.int64))
+
     @classmethod
     def from_trace(cls, trace: DelayTrace) -> "WorkerSchedule":
         k = np.arange(len(trace.delays), dtype=np.int64)
         return cls(read_versions=(k - trace.delays).astype(np.int32),
                    worker_ids=np.asarray(trace.worker_ids, np.int32),
                    commit_times=np.asarray(trace.commit_times, np.float64),
-                   num_workers=trace.num_workers)
+                   num_workers=trace.num_workers,
+                   batch_sizes=trace.batch_sizes)
 
     @classmethod
     def from_delays(cls, delays: np.ndarray,
@@ -91,7 +142,24 @@ class WorkerSchedule:
     def to_trace(self) -> DelayTrace:
         return DelayTrace(delays=self.delays, commit_times=self.commit_times,
                           worker_ids=self.worker_ids,
-                          num_workers=self.num_workers)
+                          num_workers=self.num_workers,
+                          batch_sizes=self.batch_sizes)
+
+    def with_batch_sizes(self, batch_sizes: np.ndarray,
+                         buckets: Sequence[int] | None = None
+                         ) -> "WorkerSchedule":
+        """The same schedule with explicit per-commit batch sizes, snapped up
+        the bucket ladder (powers of two, or an explicit ``buckets``
+        contract) so the executor compiles one trace per rung."""
+        sizes = np.asarray(batch_sizes, np.int64)
+        if sizes.ndim == 0:
+            sizes = np.full(len(self), int(sizes))
+        snapped = np.array([bucket_size(int(b), buckets) for b in sizes],
+                           np.int32)
+        return WorkerSchedule(
+            read_versions=self.read_versions, worker_ids=self.worker_ids,
+            commit_times=self.commit_times, num_workers=self.num_workers,
+            batch_sizes=snapped)
 
 
 def stack_schedules(schedules: Sequence[WorkerSchedule],
@@ -117,10 +185,43 @@ def stack_schedules(schedules: Sequence[WorkerSchedule],
     return rv.astype(np.int32), times
 
 
+def stack_batch_info(schedules: Sequence[WorkerSchedule], steps: int):
+    """Batch the per-chain minibatch plans into ``(steps, C)`` arrays.
+
+    Returns ``(batch_sizes int32, data_offsets int64)`` with the step axis
+    leading, or ``None`` when no schedule carries sizes; a mix of sized and
+    size-less schedules is a contract violation and raises.
+    """
+    have = [s.batch_sizes is not None for s in schedules]
+    if not any(have):
+        return None
+    if not all(have):
+        raise ValueError("either every chain's schedule carries batch_sizes "
+                         "or none does — got a mix")
+    sizes = np.stack([s.batch_sizes[:steps] for s in schedules], axis=1)
+    offs = np.stack([s.data_offsets[:steps] for s in schedules], axis=1)
+    return sizes.astype(np.int32), offs.astype(np.int64)
+
+
+def stack_worker_info(schedules: Sequence[WorkerSchedule], steps: int):
+    """Batch per-chain worker attribution into ``(steps, C)`` int32 arrays:
+    ``(worker_ids, worker_slots)`` — the inputs the executor folds into
+    per-commit noise keys under ``worker_rng=True``."""
+    wid = np.stack([s.worker_ids[:steps] for s in schedules], axis=1)
+    slot = np.stack([s.worker_slots[:steps] for s in schedules], axis=1)
+    return wid.astype(np.int32), slot.astype(np.int32)
+
+
 def ensemble_async(model: WorkerModel, num_commits: int, num_chains: int,
-                   seed: int = 0) -> list[WorkerSchedule]:
+                   seed: int = 0, *, batch_policy: str = "fixed",
+                   base_batch: int = 1, buckets=None) -> list[WorkerSchedule]:
     """C independent async executions of the same worker pool (chain c gets
-    its own event-driven simulation seeded ``seed + c``)."""
-    return [WorkerSchedule.from_trace(simulate_async(model, num_commits,
-                                                     seed=seed + c))
+    its own event-driven simulation seeded ``seed + c``).  ``batch_policy``
+    / ``base_batch`` / ``buckets`` couple per-commit batch sizes to the
+    drawn compute times (see :func:`~repro.core.delay_model.simulate_async`).
+    """
+    return [WorkerSchedule.from_trace(
+                simulate_async(model, num_commits, seed=seed + c,
+                               batch_policy=batch_policy,
+                               base_batch=base_batch, buckets=buckets))
             for c in range(num_chains)]

@@ -37,7 +37,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.samplers.base import SamplerState
-from repro.utils import SHARD_MAP_CHECK_KW, shard_map
+from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
 
 PyTree = Any
 #: per-chain forward: (single-chain params, queries (Q, ...)) -> preds (Q, ...)
@@ -78,19 +78,10 @@ def predictive_stats(preds: jax.Array, qs: jax.Array) -> ServeResult:
     return ServeResult(mean=mean, var=var, quantiles=quantiles)
 
 
-def bucket_size(n: int, buckets: Optional[Sequence[int]] = None) -> int:
-    """Smallest bucket holding ``n`` queries: the next power of two, or the
-    smallest entry of an explicit ``buckets`` ladder (which is a contract —
-    a request larger than its top rung fails loudly instead of re-tracing)."""
-    if n < 1:
-        raise ValueError(f"need at least one query, got {n}")
-    if buckets is None:
-        return 1 << (n - 1).bit_length()
-    fits = [b for b in buckets if b >= n]
-    if not fits:
-        raise ValueError(f"{n} queries exceed the largest bucket "
-                         f"{max(buckets)}; pass a deeper `buckets` ladder")
-    return min(fits)
+# `bucket_size` is re-exported here (and from repro.cluster) for backwards
+# compatibility; the ladder lives in repro.utils because the heterogeneous-
+# minibatch schedule compiler applies the same one-trace-per-rung discipline
+# to training batches.
 
 
 def _pad_queries(queries: PyTree, n: int, *, copy_exact: bool) -> PyTree:

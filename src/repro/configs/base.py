@@ -8,7 +8,7 @@ Every assigned architecture gets one module in ``repro/configs/`` defining an
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 ARCH_IDS = [

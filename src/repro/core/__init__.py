@@ -13,12 +13,14 @@ from repro.core.delay import (  # noqa: F401
     validate_staleness,
 )
 from repro.core.delay_model import (  # noqa: F401
+    BATCH_POLICIES,
     DelayTrace,
     WorkerModel,
     constant_delays,
     simulate_async,
     simulate_sync,
     speedup_vs_sync,
+    truncate_to_evals,
 )
 from repro.core.potentials import PolyRegression, Quadratic, RICA  # noqa: F401
 from repro.core.schedules import clip_to_theory, constant, poly_decay, wsd  # noqa: F401

@@ -19,15 +19,29 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.utils import bucket_size
+
+#: the batch-size policy vocabulary (shared with
+#: :class:`repro.cluster.ClusterEngine`).  :meth:`WorkerModel.batch_sizes`
+#: draws ``"fixed"`` and ``"inverse-speed"``; ``"explicit"`` sizes bypass
+#: the worker model and are passed straight to the executor.
+BATCH_POLICIES = ("fixed", "inverse-speed", "explicit")
+
 
 @dataclass
 class DelayTrace:
-    """Realized asynchronous schedule."""
+    """Realized asynchronous schedule.
+
+    ``batch_sizes`` (optional) is the per-commit minibatch size the committing
+    worker averaged its gradient over — ``None`` means the legacy fixed-shape
+    contract where every commit consumes one engine-defined minibatch.
+    """
 
     delays: np.ndarray        # (num_commits,) int32 staleness tau_k per commit
     commit_times: np.ndarray  # (num_commits,) float64 simulated wall clock
     worker_ids: np.ndarray    # (num_commits,) which worker committed
     num_workers: int
+    batch_sizes: np.ndarray | None = None  # (num_commits,) int32 per commit
 
     @property
     def max_delay(self) -> int:
@@ -36,6 +50,14 @@ class DelayTrace:
     @property
     def mean_delay(self) -> float:
         return float(self.delays.mean()) if self.delays.size else 0.0
+
+    @property
+    def total_grad_evals(self) -> int:
+        """Total gradient evaluations = sum of per-commit batch sizes (one
+        per commit under the legacy fixed-shape contract)."""
+        if self.batch_sizes is None:
+            return int(self.delays.shape[0])
+        return int(self.batch_sizes.sum())
 
 
 @dataclass
@@ -64,13 +86,52 @@ class WorkerModel:
         sigma = np.sqrt(np.log1p(self.cv**2))
         return float(mu * rng.lognormal(-0.5 * sigma**2, sigma))
 
+    def batch_sizes(self, batch_policy: str = "fixed", *, base_batch: int = 1,
+                    buckets=None) -> np.ndarray:
+        """Per-worker minibatch size under ``batch_policy``.
 
-def simulate_async(model: WorkerModel, num_commits: int, seed: int = 0) -> DelayTrace:
-    """Asynchronous execution: every worker free-runs; commits serialize."""
+        - ``fixed``: every worker consumes exactly ``base_batch`` per commit
+          (the legacy contract — sizes are *not* bucket-snapped, so the
+          realized schedule is unchanged).
+        - ``inverse-speed``: a worker's batch scales with its per-step time
+          relative to the fastest worker (Chen et al.'s staleness/variance
+          trade: slow workers amortize their inevitable staleness over more
+          data, fast workers commit fresh low-latency gradients), snapped up
+          the bucket ladder so mixed sizes compile one trace per rung.
+        """
+        if batch_policy == "fixed":
+            return np.full(self.num_workers, base_batch, np.int32)
+        if batch_policy == "inverse-speed":
+            rel = self._speeds / self._speeds.min()  # slowest -> largest
+            raw = np.maximum(1, np.round(base_batch * rel)).astype(np.int64)
+            return np.array([bucket_size(int(b), buckets) for b in raw],
+                            np.int32)
+        raise ValueError(
+            f"unknown batch policy {batch_policy!r} for a WorkerModel "
+            f"(choose from {BATCH_POLICIES[:2]}; 'explicit' sizes are passed "
+            "straight to the executor)")
+
+
+def simulate_async(model: WorkerModel, num_commits: int, seed: int = 0, *,
+                   batch_policy: str = "fixed", base_batch: int = 1,
+                   buckets=None) -> DelayTrace:
+    """Asynchronous execution: every worker free-runs; commits serialize.
+
+    ``batch_policy`` couples each worker's per-commit batch size to its
+    drawn compute times: a commit over ``b`` examples takes ``b/base_batch``
+    times the worker's sampled per-``base_batch`` step time, so larger
+    batches make a worker commit less often but average more data — the
+    realized staleness *and* the realized batch sizes come out of one
+    event-driven simulation.  With the default fixed policy the time scale
+    factor is exactly 1.0 and the realized trace is unchanged.
+    """
+    sizes = model.batch_sizes(batch_policy, base_batch=base_batch,
+                              buckets=buckets)
+    scale = sizes.astype(np.float64) / float(base_batch)
     rng = np.random.default_rng(seed)
     heap: list[tuple[float, int, int]] = []  # (finish_time, worker, read_version)
     for w in range(model.num_workers):
-        heapq.heappush(heap, (model.sample_step_time(rng, w), w, 0))
+        heapq.heappush(heap, (model.sample_step_time(rng, w) * scale[w], w, 0))
 
     delays = np.empty(num_commits, dtype=np.int32)
     times = np.empty(num_commits, dtype=np.float64)
@@ -83,9 +144,12 @@ def simulate_async(model: WorkerModel, num_commits: int, seed: int = 0) -> Delay
         times[k] = t
         workers[k] = w
         version += 1
-        heapq.heappush(heap, (t + model.sample_step_time(rng, w), w, version))
+        heapq.heappush(heap,
+                       (t + model.sample_step_time(rng, w) * scale[w], w,
+                        version))
     return DelayTrace(delays=delays, commit_times=times, worker_ids=workers,
-                      num_workers=model.num_workers)
+                      num_workers=model.num_workers,
+                      batch_sizes=sizes[workers])
 
 
 def simulate_sync(model: WorkerModel, num_rounds: int, seed: int = 0) -> DelayTrace:
@@ -119,6 +183,26 @@ def constant_delays(tau: int, num_commits: int) -> DelayTrace:
         worker_ids=np.zeros(num_commits, dtype=np.int32),
         num_workers=1,
     )
+
+
+def truncate_to_evals(trace: DelayTrace, evals: int) -> DelayTrace:
+    """Clip a trace at a gradient-evaluation budget: keep the shortest commit
+    prefix whose summed batch sizes reach ``evals`` (commit count, for a
+    legacy trace without sizes).  The equal-compute axis for comparing batch
+    policies: heterogeneous and fixed schedules truncated to one budget have
+    consumed the same number of per-example gradients."""
+    sizes = (np.ones(len(trace.delays), np.int64) if trace.batch_sizes is None
+             else trace.batch_sizes.astype(np.int64))
+    total = np.cumsum(sizes)
+    if total.size == 0 or total[-1] < evals:
+        raise ValueError(f"trace holds {int(total[-1]) if total.size else 0} "
+                         f"grad evals, need {evals} — simulate more commits")
+    k = int(np.searchsorted(total, evals)) + 1
+    return DelayTrace(
+        delays=trace.delays[:k], commit_times=trace.commit_times[:k],
+        worker_ids=trace.worker_ids[:k], num_workers=trace.num_workers,
+        batch_sizes=None if trace.batch_sizes is None
+        else trace.batch_sizes[:k])
 
 
 def speedup_vs_sync(async_trace: DelayTrace, sync_trace: DelayTrace) -> float:

@@ -5,7 +5,7 @@ paper's NUMA box (M1).  Produces the data behind Figures 1-4 / 9-15.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

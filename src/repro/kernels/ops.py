@@ -8,7 +8,6 @@ Python for validation; on TPU pass ``interpret=False``.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

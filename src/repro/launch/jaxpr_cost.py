@@ -19,8 +19,7 @@ roofline.collective_bytes_loop_aware) since GSPMD inserts them after jaxpr.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import numpy as np

@@ -18,7 +18,7 @@ Hardware constants (TPU v5e target): 197 bf16 TFLOP/s, 819 GB/s HBM,
 from __future__ import annotations
 
 import re
-from dataclasses import asdict, dataclass
+from dataclasses import dataclass
 
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s / chip

@@ -17,7 +17,6 @@ SGLD modes exposed here:
 from __future__ import annotations
 
 from dataclasses import replace
-from functools import partial
 from typing import Any
 
 import jax
@@ -31,7 +30,7 @@ from repro.samplers.transforms import sgld_apply as apply_update
 from repro.data import make_specs
 from repro.launch.mesh import batch_axes_for, fsdp_axes_for
 from repro.models.common import partition_tree
-from repro.models.transformer import Model, init_params, loss_fn
+from repro.models.transformer import Model, init_params
 from repro.train.loop import make_grad_fn
 
 PyTree = Any

@@ -22,9 +22,7 @@ same scan.  VLM/audio frontends are embedding stubs + a trainable projector
 from __future__ import annotations
 
 import math
-from dataclasses import replace
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

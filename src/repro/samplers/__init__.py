@@ -23,11 +23,16 @@ from repro.samplers.transform import (  # noqa: F401
     stateless,
 )
 from repro.samplers.transforms import (  # noqa: F401
+    MaskedBatch,
     apply_sgld_update,
+    batch_mask,
+    batch_scaled_gamma,
     delay_read,
     fused_update,
     gradients,
     langevin_noise,
+    masked_gradients,
+    masked_mean,
     noise_like,
     pipeline_overlap,
     sgld_apply,

@@ -50,10 +50,24 @@ class Sampler:
 
     # -- one commit ----------------------------------------------------------
     def step(self, state: SamplerState, batch: Any = None,
-             delay: jax.Array | int = 0) -> tuple[SamplerState, Any]:
+             delay: jax.Array | int = 0,
+             keys: tuple[jax.Array, jax.Array] | None = None
+             ) -> tuple[SamplerState, Any]:
         """Run the chain once; ``delay`` is the realized staleness tau_k.
-        Returns ``(new_state, aux)`` with aux from the gradients stage."""
-        key, k_noise, k_delay = jax.random.split(state.key, 3)
+        Returns ``(new_state, aux)`` with aux from the gradients stage.
+
+        By default the per-step ``(noise, coordinate-delay)`` keys are split
+        off the carried chain key, which ties a commit's noise to its global
+        position in the commit sequence.  Passing explicit ``keys`` hands
+        that derivation to the caller (e.g. per-worker attribution keyed on
+        ``(worker_id, worker-local slot)``); the carried key is then left
+        untouched so the caller's derivation stays the only source of
+        randomness.
+        """
+        if keys is not None:
+            key, (k_noise, k_delay) = state.key, keys
+        else:
+            key, k_noise, k_delay = jax.random.split(state.key, 3)
         ctx = StepContext(
             params=state.params,
             x_hat=state.params,

@@ -23,10 +23,12 @@ from repro.samplers.transform import SamplerTransform, chain
 from repro.samplers.transforms import (
     GradFn,
     apply_sgld_update,
+    batch_scaled_gamma,
     delay_read,
     fused_update,
     gradients,
     langevin_noise,
+    masked_gradients,
     pipeline_overlap,
 )
 
@@ -36,7 +38,7 @@ MODES = ("sync", "consistent", "inconsistent", "pipeline")
 def sgld(mode: str, grad_fn: GradFn, *, gamma=1e-2, sigma: float = 1.0,
          tau: int = 0, has_aux: bool = False, delay_policy: DelayPolicy | None = None,
          fused: bool = False, interpret: bool = True,
-         noise_dtype=jnp.float32) -> Sampler:
+         noise_dtype=jnp.float32, base_batch: int | None = None) -> Sampler:
     """The paper's SGLD in any of its four read models.
 
     - ``sync``         X_hat = X_k (barrier baseline; tau = 0).
@@ -47,6 +49,13 @@ def sgld(mode: str, grad_fn: GradFn, *, gamma=1e-2, sigma: float = 1.0,
 
     ``fused=True`` commits through the Pallas fused kernel (noise generated
     in VMEM); ``delay_policy`` overrides the mode's default policy.
+
+    ``base_batch`` switches the chain to the heterogeneous-minibatch
+    contract: ``grad_fn(params, example)`` becomes a *per-example* oracle
+    evaluated through :func:`~repro.samplers.transforms.masked_gradients`
+    over the executor's bucket-padded :class:`MaskedBatch` views, and the
+    step size is linearly rescaled by ``size / base_batch``
+    (:func:`~repro.samplers.transforms.batch_scaled_gamma`).
     """
     if mode not in MODES:
         raise ValueError(f"unknown SGLD mode {mode!r}")
@@ -59,7 +68,11 @@ def sgld(mode: str, grad_fn: GradFn, *, gamma=1e-2, sigma: float = 1.0,
             delay_policy = (PerCoordinateDelay(tau, fused=fused, interpret=interpret)
                             if mode == "inconsistent" else TraceDelay(tau))
         parts.append(delay_read(delay_policy))
-    parts.append(gradients(grad_fn, has_aux=has_aux))
+    if base_batch is None:
+        parts.append(gradients(grad_fn, has_aux=has_aux))
+    else:
+        parts.append(batch_scaled_gamma(base_batch))
+        parts.append(masked_gradients(grad_fn, has_aux=has_aux))
     if mode == "pipeline":
         parts.append(pipeline_overlap())
     if fused:

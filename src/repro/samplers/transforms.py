@@ -8,7 +8,7 @@ makes the new presets bit-compatible with the old sampler.
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Any, Callable
+from typing import TYPE_CHECKING, Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,38 @@ if TYPE_CHECKING:  # annotation-only; a runtime import would cycle via core
 
 PyTree = Any
 GradFn = Callable[..., PyTree]  # grad_fn(params, batch) -> grads | (grads, aux)
+
+
+class MaskedBatch(NamedTuple):
+    """A bucket-padded minibatch view: ``data`` leaves carry a leading
+    bucket axis of ``B >= size`` examples, of which only the first ``size``
+    are real.  The executor pads every commit's window up a shape-bucket
+    ladder so a heterogeneous batch schedule compiles one trace per rung —
+    the same discipline :class:`~repro.cluster.serve.ServeEngine` applies to
+    query batches — and :func:`masked_gradients` averages over exactly the
+    real examples, so padding rows never touch the math."""
+
+    data: Any        # pytree; leaves (B, ...) bucket-padded examples
+    size: jax.Array  # () int32 count of real examples (<= B)
+
+
+def batch_mask(batch: MaskedBatch) -> jax.Array:
+    """(B,) float32 indicator of the real examples in a padded view."""
+    b = jax.tree_util.tree_leaves(batch.data)[0].shape[0]
+    return (jnp.arange(b) < batch.size).astype(jnp.float32)
+
+
+def masked_mean(values: PyTree, size: jax.Array) -> PyTree:
+    """Mean of the first ``size`` rows of every ``(B, ...)`` leaf — the
+    single reduction behind the masked gradient oracle (bitwise equal to
+    ``jnp.mean`` when ``size == B``, since the mask multiplies by 1.0)."""
+
+    def reduce(v):
+        mask = (jnp.arange(v.shape[0]) < size).astype(v.dtype)
+        mask = mask.reshape((-1,) + (1,) * (v.ndim - 1))
+        return jnp.sum(v * mask, axis=0) / size.astype(v.dtype)
+
+    return jax.tree_util.tree_map(reduce, values)
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +97,50 @@ def gradients(grad_fn: GradFn, has_aux: bool = False) -> SamplerTransform:
         out = grad_fn(ctx.x_hat, ctx.batch)
         grads, aux = out if has_aux else (out, None)
         return ctx._replace(grads=grads, aux=aux)
+
+    return stateless(update)
+
+
+def masked_gradients(grad_fn: GradFn, has_aux: bool = False) -> SamplerTransform:
+    """Evaluate a *per-example* gradient oracle over a :class:`MaskedBatch`.
+
+    ``grad_fn(params, example)`` is vmapped over the padded bucket axis and
+    reduced with :func:`masked_mean`, so the committed gradient averages
+    exactly the ``size`` real examples regardless of how far the bucket
+    ladder padded the view — mixed batch sizes change the mask contents,
+    never the trace.  With ``has_aux`` the per-example aux is masked-mean
+    reduced the same way.
+    """
+
+    def update(ctx: StepContext) -> StepContext:
+        mb = ctx.batch
+        if not isinstance(mb, MaskedBatch):
+            raise TypeError("masked_gradients needs a MaskedBatch (did you "
+                            "mean gradients(), or forget batch_policy=?)")
+        out = jax.vmap(lambda e: grad_fn(ctx.x_hat, e))(mb.data)
+        per_grads, per_aux = out if has_aux else (out, None)
+        grads = masked_mean(per_grads, mb.size)
+        aux = masked_mean(per_aux, mb.size) if has_aux else None
+        return ctx._replace(grads=grads, aux=aux)
+
+    return stateless(update)
+
+
+def batch_scaled_gamma(base_batch: int) -> SamplerTransform:
+    """Linear step-size scaling for heterogeneous batches: a commit that
+    averaged ``b`` examples advances the Langevin discretization with
+    ``gamma_k * b / base_batch`` (and the injected noise, which reads
+    ``ctx.gamma`` downstream, scales accordingly) — so one large-batch
+    commit covers the same integrator time as ``b/base_batch`` base-size
+    commits, at lower gradient variance.  A no-op scale of exactly 1.0 when
+    ``b == base_batch``, keeping the fixed policy bit-compatible."""
+
+    def update(ctx: StepContext) -> StepContext:
+        mb = ctx.batch
+        if not isinstance(mb, MaskedBatch):
+            raise TypeError("batch_scaled_gamma needs a MaskedBatch upstream")
+        scale = mb.size.astype(jnp.float32) / jnp.float32(base_batch)
+        return ctx._replace(gamma=ctx.gamma * scale)
 
     return stateless(update)
 

@@ -85,14 +85,15 @@ def checkpoint_hook(path: str, every: int = 100) -> Hook:
     return hook
 
 
-def merge_commit_times(aux, t_chunk):
-    """Thread a chunk's host-side commit times into its aux under
-    ``"commit_time"`` (shared by Engine and ClusterEngine)."""
+def merge_host_aux(aux, host_rows: dict):
+    """Thread chunk-aligned host-side arrays (commit times, cumulative grad
+    evals, ...) into the chunk's aux dict (shared by Engine and
+    ClusterEngine)."""
     if aux is None:
-        return {"commit_time": t_chunk}
+        return dict(host_rows)
     if isinstance(aux, dict):
-        return {**aux, "commit_time": t_chunk}
-    return {"aux": aux, "commit_time": t_chunk}
+        return {**aux, **host_rows}
+    return {"aux": aux, **host_rows}
 
 
 def flush_hooks(hooks: Sequence[Hook], step_end: int,
@@ -109,42 +110,55 @@ def drive_chunks(run_chunk, state: SamplerState, *, steps: int,
                  chunk_size: int, hooks: Sequence[Hook], collect_aux: bool,
                  extra, batches: Optional[PyTree] = None,
                  gen_batches=None, key: Optional[jax.Array] = None,
-                 commit_times=None):
+                 commit_times=None, host_aux: Optional[dict] = None,
+                 slice_batches: bool = True, chunk_info=None):
     """The host chunk loop shared by :class:`Engine` and
     :class:`~repro.cluster.executor.ClusterEngine`.
 
-    ``run_chunk(state, batches, extra) -> (state, aux)`` is the jitted scan;
-    ``extra`` is the per-step device input sliced alongside the batches
-    (delays for Engine, read versions for ClusterEngine).  Provide stacked
-    ``batches`` or ``gen_batches(key, n) -> (key, chunk_batches)`` plus
-    ``key``.  ``commit_times`` (host, leading axis ``steps``) are merged
-    into each chunk's aux; hooks run between chunks and are flushed at the
-    end.
+    ``run_chunk(state, batches, extra, *static) -> (state, aux)`` is the
+    jitted scan; ``extra`` is the per-step device input (array or pytree of
+    arrays with leading axis ``steps``) sliced alongside the batches
+    (delays for Engine, read versions / batch plans for ClusterEngine).
+    Provide stacked ``batches`` or ``gen_batches(key, n) -> (key,
+    chunk_batches)`` plus ``key``; ``slice_batches=False`` hands ``batches``
+    to every chunk whole (a data *stream* the scan body indexes itself, as
+    the heterogeneous-batch executor does).  ``commit_times`` (host, leading
+    axis ``steps``) and any ``host_aux`` arrays are sliced per chunk and
+    merged into its aux; ``chunk_info(done, n)`` may return extra *static*
+    args for ``run_chunk`` (e.g. the chunk's padded bucket width).  Hooks
+    run between chunks and are flushed at the end.
     """
     if batches is None and gen_batches is None:
         batches = jnp.zeros((steps, 1))  # batchless oracles (potentials)
     if batches is None and key is None:
         raise ValueError("generating batches from batch_fn needs `key`")
-    if batches is not None:
+    if batches is not None and slice_batches:
         n_batches = jax.tree_util.tree_leaves(batches)[0].shape[0]
         if n_batches < steps:  # dynamic_slice would silently clamp+reuse
             raise ValueError(f"batches has {n_batches} entries, need {steps}")
+    host_rows = dict(host_aux or {})
+    if commit_times is not None:
+        host_rows["commit_time"] = commit_times
 
     aux_chunks = []
     done = 0
     while done < steps:
         n = min(chunk_size, steps - done)
-        if batches is not None:
+        if batches is None:
+            key, chunk_batches = gen_batches(key, n)
+        elif slice_batches:
             chunk_batches = jax.tree_util.tree_map(
                 lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), batches)
         else:
-            key, chunk_batches = gen_batches(key, n)
-        chunk_extra = jax.lax.dynamic_slice_in_dim(extra, done, n)
-        state, aux = run_chunk(state, chunk_batches, chunk_extra)
+            chunk_batches = batches
+        chunk_extra = jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), extra)
+        static = chunk_info(done, n) if chunk_info is not None else ()
+        state, aux = run_chunk(state, chunk_batches, chunk_extra, *static)
         done += n
-        if commit_times is not None:
-            aux = merge_commit_times(aux,
-                                     np.asarray(commit_times[done - n:done]))
+        if host_rows:
+            aux = merge_host_aux(aux, {k: np.asarray(v[done - n:done])
+                                       for k, v in host_rows.items()})
         if collect_aux:
             aux_chunks.append(aux)
         for hook in hooks:

@@ -87,6 +87,24 @@ def use_mesh(mesh):
     return mesh
 
 
+def bucket_size(n: int, buckets=None) -> int:
+    """Smallest bucket ladder rung holding ``n`` items: the next power of two,
+    or the smallest entry of an explicit ``buckets`` ladder (which is a
+    contract — ``n`` larger than the top rung fails loudly instead of
+    silently extending the ladder).  Shared by the serve request batcher and
+    the heterogeneous-minibatch schedule compiler so both compile one trace
+    per rung, never one per size."""
+    if n < 1:
+        raise ValueError(f"need at least one item, got {n}")
+    if buckets is None:
+        return 1 << (n - 1).bit_length()
+    fits = [b for b in buckets if b >= n]
+    if not fits:
+        raise ValueError(f"{n} items exceed the largest bucket "
+                         f"{max(buckets)}; pass a deeper `buckets` ladder")
+    return min(fits)
+
+
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

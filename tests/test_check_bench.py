@@ -1,0 +1,144 @@
+"""Unit tests for the CI perf-regression gates in scripts/check_bench.py:
+the cluster gate (speedup / W2-at-budget / batch-policy advantage) and the
+serve gate (QPS floor, p99 ceiling, retrace flag, row presence)."""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+import check_bench  # noqa: E402
+
+
+@pytest.fixture
+def cluster_baseline():
+    return {
+        "config": {"num_chains": 8, "seed": 0},
+        "speedup_vs_sync": 1.3,
+        "final_w2_async": 0.55,
+        "batch_policy": {"het_wallclock_advantage": 2.2},
+    }
+
+
+@pytest.fixture
+def serve_baseline():
+    return {
+        "config": {"requests": 60, "seed": 0},
+        "rows": [
+            {"chains": 8, "shards": 1, "qps": 40000.0, "p99_ms": 1.0,
+             "retraced_in_stream": False},
+            {"chains": 32, "shards": 4, "qps": 8000.0, "p99_ms": 4.5,
+             "retraced_in_stream": False},
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# cluster gate
+# ---------------------------------------------------------------------------
+def test_cluster_gate_passes_identical_payload(cluster_baseline):
+    assert check_bench.check(copy.deepcopy(cluster_baseline),
+                             cluster_baseline) == []
+
+
+def test_cluster_gate_fails_on_speedup_regression(cluster_baseline):
+    bad = copy.deepcopy(cluster_baseline)
+    bad["speedup_vs_sync"] = 1.01  # > 1 but far below the 20% band
+    msgs = check_bench.check(bad, cluster_baseline)
+    assert len(msgs) == 1 and "speedup regressed" in msgs[0]
+    bad["speedup_vs_sync"] = 0.9
+    assert "does not exceed 1" in check_bench.check(bad, cluster_baseline)[0]
+
+
+def test_cluster_gate_fails_on_w2_regression(cluster_baseline):
+    bad = copy.deepcopy(cluster_baseline)
+    bad["final_w2_async"] = 0.55 * 1.6  # above the 50% band
+    msgs = check_bench.check(bad, cluster_baseline)
+    assert len(msgs) == 1 and "W2-at-budget regressed" in msgs[0]
+
+
+def test_cluster_gate_fails_when_het_advantage_lost(cluster_baseline):
+    bad = copy.deepcopy(cluster_baseline)
+    bad["batch_policy"]["het_wallclock_advantage"] = 0.97
+    msgs = check_bench.check(bad, cluster_baseline)
+    assert len(msgs) == 1 and "wall-clock advantage" in msgs[0]
+    bad["batch_policy"]["het_wallclock_advantage"] = None  # never crossed
+    assert len(check_bench.check(bad, cluster_baseline)) == 1
+
+
+def test_cluster_gate_tolerates_payloads_without_batch_policy(
+        cluster_baseline):
+    old = {k: v for k, v in cluster_baseline.items() if k != "batch_policy"}
+    assert check_bench.check(copy.deepcopy(old), cluster_baseline) == []
+
+
+# ---------------------------------------------------------------------------
+# serve gate
+# ---------------------------------------------------------------------------
+def test_serve_gate_passes_within_band(serve_baseline):
+    ok = copy.deepcopy(serve_baseline)
+    ok["rows"][0]["qps"] *= 0.5   # inside the wide 75% band
+    ok["rows"][0]["p99_ms"] *= 3  # inside the 4x band
+    assert check_bench.check(ok, serve_baseline) == []
+
+
+def test_serve_gate_fails_on_seeded_qps_regression(serve_baseline):
+    bad = copy.deepcopy(serve_baseline)
+    bad["rows"][0]["qps"] = 40000.0 * 0.2  # below the 25% floor
+    msgs = check_bench.check(bad, serve_baseline)
+    assert len(msgs) == 1 and "QPS regressed" in msgs[0]
+    assert "chains=8 shards=1" in msgs[0]
+
+
+def test_serve_gate_fails_on_seeded_p99_regression(serve_baseline):
+    bad = copy.deepcopy(serve_baseline)
+    bad["rows"][1]["p99_ms"] = 4.5 * 6.0  # above the 5x ceiling
+    msgs = check_bench.check(bad, serve_baseline)
+    assert len(msgs) == 1 and "p99 latency regressed" in msgs[0]
+
+
+def test_serve_gate_fails_on_in_stream_retrace_exactly(serve_baseline):
+    bad = copy.deepcopy(serve_baseline)
+    bad["rows"][0]["retraced_in_stream"] = True  # no tolerance band
+    msgs = check_bench.check(bad, serve_baseline)
+    assert len(msgs) == 1 and "retraced" in msgs[0]
+
+
+def test_serve_gate_fails_on_missing_row(serve_baseline):
+    bad = copy.deepcopy(serve_baseline)
+    del bad["rows"][1]
+    msgs = check_bench.check(bad, serve_baseline)
+    assert len(msgs) == 1 and "row missing" in msgs[0]
+
+
+def test_serve_gate_custom_tolerances(serve_baseline):
+    tight = copy.deepcopy(serve_baseline)
+    tight["rows"][0]["qps"] *= 0.85
+    assert check_bench.check(tight, serve_baseline) == []
+    assert check_bench.check(tight, serve_baseline, tol_qps=0.10) != []
+
+
+# ---------------------------------------------------------------------------
+# CLI end-to-end against the committed baselines
+# ---------------------------------------------------------------------------
+def test_cli_gates_the_committed_serve_baseline_against_itself(tmp_path):
+    root = os.path.join(os.path.dirname(__file__), "..")
+    baseline = os.path.join(root, "benchmarks", "baselines",
+                            "BENCH_serve.json")
+    assert check_bench.main([baseline, "--baseline", baseline]) == 0
+    with open(baseline) as f:
+        payload = json.load(f)
+    payload["rows"][0]["qps"] = 1.0
+    fresh = tmp_path / "BENCH_serve.json"
+    fresh.write_text(json.dumps(payload))
+    assert check_bench.main([str(fresh), "--baseline", baseline]) == 1
+
+
+def test_cli_gates_the_committed_cluster_baseline_against_itself():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    baseline = os.path.join(root, "benchmarks", "baselines",
+                            "BENCH_cluster.json")
+    assert check_bench.main([baseline, "--baseline", baseline]) == 0

@@ -9,7 +9,6 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    RingBuffer,
     WorkerModel,
     constant_delays,
     init_ring,

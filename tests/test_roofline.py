@@ -2,9 +2,8 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.launch.jaxpr_cost import Cost, jaxpr_cost, step_cost
+from repro.launch.jaxpr_cost import step_cost
 from repro.launch.roofline import (
     _buffer_bytes,
     collective_bytes,

@@ -9,7 +9,7 @@ import pytest
 from repro import samplers
 from repro.core import Quadratic, constant_delays
 from repro.core import delay as delay_lib
-from repro.samplers.policies import ConstantDelay, PerCoordinateDelay, TraceDelay
+from repro.samplers.policies import ConstantDelay, PerCoordinateDelay
 from repro.samplers.transforms import noise_like, sgld_apply
 from repro.utils import tree_zeros_like
 

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced
-from repro.models.ssm import SSMState, apply_ssm, init_ssm, init_ssm_state
+from repro.models.ssm import apply_ssm, init_ssm, init_ssm_state
 from repro.models.xlstm import (
     apply_mlstm,
     apply_slstm,

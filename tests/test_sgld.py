@@ -11,8 +11,6 @@ from repro.core import (
     SGLDConfig,
     SGLDSampler,
     constant_delays,
-    simulate_async,
-    WorkerModel,
 )
 
 SIGMA = 0.5

@@ -23,7 +23,7 @@ from repro.core import (
     gamma_eps_w2,
     simulate_async,
 )
-from repro.metrics import gaussian_w2, w2_to_gaussian
+from repro.metrics import w2_to_gaussian
 
 
 @pytest.fixture(scope="module")

@@ -1,6 +1,5 @@
 """Corollary 2.1 constants: shape of the tau-dependence."""
 
-import math
 
 import pytest
 

@@ -5,7 +5,6 @@ import os
 from dataclasses import replace
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
