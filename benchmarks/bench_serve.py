@@ -49,7 +49,9 @@ def _measure(engine: ServeEngine, *, requests: int, max_queries: int,
     buckets = sorted({bucket_size(int(n)) for n in sizes})
     for n in buckets:  # compile every bucket off the clock
         jax.block_until_ready(engine(np.zeros(n, np.float32)).mean)
+        engine(np.ones(max(n - 1, 1), np.float32))  # warm the pad scratch too
     traces_warm = engine.num_traces
+    allocs_warm = engine.num_host_pad_allocs
 
     lat = []
     t_all = time.time()
@@ -69,6 +71,9 @@ def _measure(engine: ServeEngine, *, requests: int, max_queries: int,
         "buckets": len(buckets),
         "traces": engine.num_traces,
         "retraced_in_stream": engine.num_traces > traces_warm,
+        # host padding must reuse the per-rung scratch: zero allocations
+        # (device or host) per request once the rungs are warm
+        "pad_allocs_in_stream": engine.num_host_pad_allocs - allocs_warm,
         "qps": round(float(sizes.sum()) / total_s, 1),
         "requests_per_s": round(requests / total_s, 1),
         "p50_ms": round(p50, 3),
@@ -142,3 +147,6 @@ if __name__ == "__main__":
     if any(r["retraced_in_stream"] for r in result["rows"]):
         raise SystemExit("serve path retraced inside a request stream "
                          "(more than one trace per shape bucket)")
+    if any(r["pad_allocs_in_stream"] for r in result["rows"]):
+        raise SystemExit("request padding allocated per request instead of "
+                         "reusing the per-rung scratch")

@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     bench_cluster,
+    bench_decode,
     bench_engine,
     bench_kernels,
     bench_regression,
@@ -32,6 +33,7 @@ BENCHES = {
     "engine": bench_engine.main,           # scan-chunked Engine vs host loop
     "cluster": bench_cluster.main,         # C-chain ensemble W2 + speedup
     "serve": bench_serve.main,             # chain-bank predictive serving
+    "decode": bench_decode.main,           # streaming BMA decode tokens/sec
     "roofline": bench_roofline.main,       # §Roofline table (from dry-run)
 }
 

@@ -1,11 +1,12 @@
-"""CI perf-regression gates for the cluster and serve benchmarks.
+"""CI perf-regression gates for the cluster, serve, and decode benchmarks.
 
-Compares a freshly produced ``BENCH_cluster.json`` / ``BENCH_serve.json``
-against the committed baseline under ``benchmarks/baselines/`` inside a
-tolerance band and exits non-zero on regression, so the ``bench-smoke`` and
-``serve-smoke`` jobs *fail* instead of merely uploading an artifact.  The
-payload kind is detected from its contents (a serve payload carries
-``rows``).
+Compares a freshly produced ``BENCH_cluster.json`` / ``BENCH_serve.json`` /
+``BENCH_decode.json`` against the committed baseline under
+``benchmarks/baselines/`` inside a tolerance band and exits non-zero on
+regression, so the ``bench-smoke``, ``serve-smoke``, and ``decode-smoke``
+jobs *fail* instead of merely uploading an artifact.  The payload kind is
+detected from its contents (a decode payload declares ``kind``, a serve
+payload carries ``rows``).
 
 Cluster gate (simulated, machine-independent — keep the bands tight):
 
@@ -25,6 +26,19 @@ a retrace slipping into the request stream, still trip them):
 - p99 latency may not rise above ``baseline * (1 + tol_p99)``;
 - ``retraced_in_stream`` must stay False (exact, no band);
 - every baseline row must still be present.
+
+Decode gate (wall-clock, machine-dependent — like the serve gate, the
+throughput floor sits at 25% of baseline because CI runners differ in
+absolute speed; the *structural* invariants below are exact):
+
+- per (chains, shards) row, tokens/sec may not fall below
+  ``baseline * (1 - tol_tps)`` (floor at 25% of baseline by default);
+- per-token p99 latency may not rise above ``baseline * (1 + tol_p99)``;
+- the in-stream retrace count must match the baseline **exactly** (the
+  trace count is a program-structure invariant, not a timing), and
+  ``retraced_in_stream`` / ``pad_allocs_in_stream`` must stay falsy;
+- sharded decode must stay sublinear in C (``sublinear.pass``) wherever the
+  baseline recorded it.
 
 To accept an intentional change, re-run the benchmark and commit the new
 JSON as the baseline.
@@ -74,41 +88,97 @@ def _serve_rows(payload: dict) -> dict:
     return {(r["chains"], r["shards"]): r for r in payload["rows"]}
 
 
-def check_serve(current: dict, baseline: dict, *, tol_qps: float,
-                tol_p99: float) -> list[str]:
-    """Serve-bench regressions (empty list = pass)."""
+def _check_rows(current: dict, baseline: dict, *, tput_key: str,
+                tput_label: str, tol_tput: float, lat_key: str,
+                lat_label: str, tol_lat: float, extra=None) -> list[str]:
+    """Shared per-(chains, shards)-row gate: throughput floor, latency
+    ceiling, row presence; ``extra(label, row, row0)`` adds gate-specific
+    exact checks.  One implementation so the serve and decode gates cannot
+    drift apart."""
     failures = []
     cur = _serve_rows(current)
     for key, row0 in _serve_rows(baseline).items():
-        chains, shards = key
-        label = f"chains={chains} shards={shards}"
+        label = f"chains={key[0]} shards={key[1]}"
         row = cur.get(key)
         if row is None:
             failures.append(f"{label}: row missing from the fresh benchmark")
             continue
-        floor = row0["qps"] * (1.0 - tol_qps)
-        if row["qps"] < floor:
+        floor = row0[tput_key] * (1.0 - tol_tput)
+        if row[tput_key] < floor:
             failures.append(
-                f"{label}: QPS regressed: {row['qps']:.1f} < {floor:.1f} "
-                f"(baseline {row0['qps']:.1f}, tolerance {tol_qps:.0%})")
-        ceil = row0["p99_ms"] * (1.0 + tol_p99)
-        if row["p99_ms"] > ceil:
+                f"{label}: {tput_label} regressed: {row[tput_key]:.1f} < "
+                f"{floor:.1f} (baseline {row0[tput_key]:.1f}, "
+                f"tolerance {tol_tput:.0%})")
+        ceil = row0[lat_key] * (1.0 + tol_lat)
+        if row[lat_key] > ceil:
             failures.append(
-                f"{label}: p99 latency regressed: {row['p99_ms']:.3f}ms > "
-                f"{ceil:.3f}ms (baseline {row0['p99_ms']:.3f}ms, "
-                f"tolerance {tol_p99:.0%})")
+                f"{label}: {lat_label} regressed: {row[lat_key]:.3f}ms > "
+                f"{ceil:.3f}ms (baseline {row0[lat_key]:.3f}ms, "
+                f"tolerance {tol_lat:.0%})")
+        if extra is not None:
+            failures.extend(extra(label, row, row0))
+    return failures
+
+
+def check_serve(current: dict, baseline: dict, *, tol_qps: float,
+                tol_p99: float) -> list[str]:
+    """Serve-bench regressions (empty list = pass)."""
+
+    def extra(label, row, row0):
         if row.get("retraced_in_stream"):
+            return [f"{label}: serve path retraced inside the request "
+                    "stream (more than one trace per shape bucket)"]
+        return []
+
+    return _check_rows(current, baseline, tput_key="qps", tput_label="QPS",
+                       tol_tput=tol_qps, lat_key="p99_ms",
+                       lat_label="p99 latency", tol_lat=tol_p99, extra=extra)
+
+
+def check_decode(current: dict, baseline: dict, *, tol_tps: float,
+                 tol_p99: float) -> list[str]:
+    """Decode-bench regressions (empty list = pass)."""
+
+    def extra(label, row, row0):
+        msgs = []
+        if row["traces"] != row0["traces"]:
+            msgs.append(
+                f"{label}: trace count changed: {row['traces']} != baseline "
+                f"{row0['traces']} (one trace per (bucket, max_new) pair is "
+                "a program-structure invariant)")
+        if row.get("retraced_in_stream"):
+            msgs.append(
+                f"{label}: decode path retraced inside the prompt stream")
+        if row.get("pad_allocs_in_stream"):
+            msgs.append(
+                f"{label}: prompt padding allocated per request "
+                f"({row['pad_allocs_in_stream']} allocs in stream)")
+        return msgs
+
+    failures = _check_rows(current, baseline, tput_key="tokens_per_s",
+                           tput_label="tokens/sec", tol_tput=tol_tps,
+                           lat_key="per_token_p99_ms",
+                           lat_label="per-token p99", tol_lat=tol_p99,
+                           extra=extra)
+    if baseline.get("sublinear") is not None:
+        sub = current.get("sublinear")
+        if sub is None or not sub.get("pass"):
             failures.append(
-                f"{label}: serve path retraced inside the request stream "
-                "(more than one trace per shape bucket)")
+                "sharded decode lost sublinearity in C: per-token cost "
+                f"{sub and sub.get('sharded_per_token_ms')}ms vs linear "
+                f"bound {sub and sub.get('linear_bound_ms')}ms")
     return failures
 
 
 def check(current: dict, baseline: dict, *, tol_speedup: float = 0.20,
           tol_w2: float = 0.50, tol_qps: float = 0.75,
-          tol_p99: float = 4.0) -> list[str]:
+          tol_p99: float = 4.0, tol_tps: float = 0.75) -> list[str]:
     """Returns human-readable regression messages (empty = pass); dispatches
-    on the payload kind (serve payloads carry ``rows``)."""
+    on the payload kind (decode payloads declare ``kind``, serve payloads
+    carry ``rows``)."""
+    if current.get("kind") == "decode":
+        return check_decode(current, baseline, tol_tps=tol_tps,
+                            tol_p99=tol_p99)
     if "rows" in current:
         return check_serve(current, baseline, tol_qps=tol_qps,
                            tol_p99=tol_p99)
@@ -117,6 +187,18 @@ def check(current: dict, baseline: dict, *, tol_speedup: float = 0.20,
 
 
 def _summary(current: dict, baseline: dict) -> str:
+    if current.get("kind") == "decode":
+        cur, base = _serve_rows(current), _serve_rows(baseline)
+        parts = []
+        for key in sorted(base):
+            c, b = cur.get(key), base[key]
+            got = (f"tok/s {c['tokens_per_s']:.0f} "
+                   f"p99 {c['per_token_p99_ms']:.2f}ms "
+                   f"traces {c['traces']}" if c else "MISSING")
+            parts.append(f"chains={key[0]} shards={key[1]}: {got} "
+                         f"(baseline tok/s {b['tokens_per_s']:.0f} "
+                         f"traces {b['traces']})")
+        return "\n".join(parts)
     if "rows" in current:
         cur, base = _serve_rows(current), _serve_rows(baseline)
         parts = []
@@ -148,6 +230,10 @@ def main(argv=None) -> int:
                     "absolute throughput is machine-dependent)")
     ap.add_argument("--tol-p99", type=float, default=4.0,
                     help="allowed fractional p99 increase (default 4.0)")
+    ap.add_argument("--tol-tps", type=float, default=0.75,
+                    help="allowed fractional tokens/sec drop for the decode "
+                    "gate (default 0.75 — wide, absolute throughput is "
+                    "machine-dependent; the floor sits at 25% of baseline)")
     args = ap.parse_args(argv)
 
     with open(args.bench) as f:
@@ -163,7 +249,7 @@ def main(argv=None) -> int:
 
     failures = check(current, baseline, tol_speedup=args.tol_speedup,
                      tol_w2=args.tol_w2, tol_qps=args.tol_qps,
-                     tol_p99=args.tol_p99)
+                     tol_p99=args.tol_p99, tol_tps=args.tol_tps)
     print(_summary(current, baseline))
     for msg in failures:
         print(f"REGRESSION: {msg}")

@@ -17,6 +17,12 @@ import numpy as np
 PyTree = Any
 _SEP = "##"
 
+# np.savez writes bfloat16 (an ml_dtypes extension type) as opaque void
+# bytes that numpy reloads as |V2 and jax rejects; bf16 leaves — transformer
+# banks — are stored viewed as uint16 plus a manifest of their paths.
+_BF16 = np.dtype(jnp.bfloat16)
+_BF16_KEY = "__bf16__"
+
 
 def _flatten_paths(tree: PyTree) -> dict[str, np.ndarray]:
     flat = {}
@@ -31,6 +37,11 @@ def _flatten_paths(tree: PyTree) -> dict[str, np.ndarray]:
 
 def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
     flat = _flatten_paths(tree)
+    bf16_paths = [p for p, a in flat.items() if a.dtype == _BF16]
+    for p in bf16_paths:
+        flat[p] = flat[p].view(np.uint16)
+    if bf16_paths:
+        flat[_BF16_KEY] = np.asarray(bf16_paths)
     if step is not None:
         flat["__step__"] = np.asarray(step)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
@@ -44,7 +55,10 @@ def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
 def restore_checkpoint(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (dtypes preserved from disk)."""
     with np.load(path) as data:
-        arrays = {k: data[k] for k in data.files if k != "__step__"}
+        bf16 = (set(data[_BF16_KEY].tolist())
+                if _BF16_KEY in data.files else set())
+        arrays = {k: (data[k].view(_BF16) if k in bf16 else data[k])
+                  for k in data.files if k not in ("__step__", _BF16_KEY)}
 
     leaves_with_paths = []
 

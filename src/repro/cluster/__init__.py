@@ -12,14 +12,19 @@ posterior-predictive queries straight from the sharded chain bank
 
 from repro.cluster.ensemble import (  # noqa: F401
     chain_positions,
+    diagnostics_recorder,
     ensemble_step,
     ensemble_w2,
+    ess,
     init_ensemble,
+    split_rhat,
     w2_recorder,
     worker_keys,
 )
+from repro.cluster.decode import DecodeEngine, DecodeResult  # noqa: F401
 from repro.cluster.executor import BATCH_POLICIES, ClusterEngine  # noqa: F401
 from repro.cluster.serve import (  # noqa: F401
+    HostScratch,
     ServeEngine,
     ServeResult,
     bucket_size,

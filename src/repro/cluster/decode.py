@@ -1,0 +1,298 @@
+"""Streaming Bayesian-model-averaged decoding from the sharded chain bank.
+
+The paper's bet is that delayed-gradient SGLD buys wall-clock without
+hurting convergence in measure; serving makes the same bet at inference
+time.  A converged :class:`~repro.cluster.executor.ClusterEngine` bank is C
+posterior samples of one transformer — the stale-chain ensemble of Chen et
+al.'s SG-MCMC predictive — and :class:`DecodeEngine` streams multi-token
+generations whose every token is drawn from the *Bayesian model average*
+over the bank: per token, each chain runs one cached decode step, the
+per-chain logits are reduced to the posterior-predictive token law
+(:func:`~repro.models.predictive.bma_logits`), and the sampled/argmaxed
+token feeds back into every chain's cache.
+
+Hot-path discipline (the decode loop is the hottest per-token path in the
+system):
+
+- **KV-cache bank**: one per-chain decode cache per batch bucket rung,
+  allocated once (``Model.init_cache_bank`` — every leaf gains the leading
+  chain axis), donated to the jitted program and updated in place across
+  serve steps.  No per-request cache allocation.
+- **One trace per (bucket, max_new_tokens)**: prompts are padded up the
+  shared bucket ladder in both batch and length (numpy scratch, reused per
+  rung), the true ``prompt_len`` rides along as a traced scalar, and the
+  whole prefill + ``lax.scan`` decode loop compiles exactly once per
+  ``(B rung, T rung, max_new_tokens)`` triple.  No per-token dispatch from
+  Python: the scan *is* the token loop.
+- **Collective layout** (``mesh=``): the bank shards over ``chain_axis``;
+  each shard vmaps the cached single-token forward over its local chains
+  and only the ``(C, B, V)`` logit block crosses shards via ``all_gather``
+  each token, after which every shard runs the identical replicated BMA
+  reduce + argmax — so sharded and unsharded decode are bitwise-equal (the
+  serve-module parity contract) and every shard feeds the same token back.
+- **2-D banks** (``shard_params=True``): the chain axis composes with the
+  repo's ``model``-axis tensor-parallel parameter sharding
+  (:func:`~repro.models.common.partition_tree` with the chain axis
+  prepended) under GSPMD, with the logit block constrained replicated
+  before the same BMA reduce — a (chains x tensor-parallel) bank of large
+  models streams without gathering parameters anywhere.  Tensor-parallel
+  contractions psum over shards, so this path trades the bitwise guarantee
+  for HBM headroom; the chain-sharded ``shard_map`` path keeps it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import partition_tree
+from repro.models.predictive import bma_logits
+from repro.samplers.base import SamplerState
+from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
+
+PyTree = Any
+
+
+class DecodeResult(NamedTuple):
+    """One streamed generation: ``tokens`` is ``(B, max_new_tokens)`` int32
+    on host; ``logits`` is the per-token BMA log-probability block
+    ``(B, max_new_tokens, V)`` when the engine was built with
+    ``return_logits=True``, else ``None``."""
+
+    tokens: np.ndarray
+    logits: Optional[np.ndarray]
+
+
+@dataclass
+class DecodeEngine:
+    """Streaming multi-token BMA generation over a chain-stacked bank.
+
+    ``model`` is the :class:`~repro.models.transformer.Model` (or anything
+    with a ``.cfg``) the bank parameterizes — the engine rebuilds its own
+    serving copy (``remat=False``, fused decode per ``fused=``); ``params``
+    is the chain-stacked bank ``(C, ...)``.  ``generate(tokens, n)`` pads
+    the prompt batch up the bucket ladder, prefills the rung's persistent
+    KV-cache bank, and drives one scan-compiled decode loop; ``key=None``
+    decodes greedily, a PRNG key samples from the BMA token law.
+    """
+
+    model: Any
+    params: PyTree
+    max_seq: int = 256
+    buckets: Optional[Sequence[int]] = None         # batch-size ladder
+    prompt_buckets: Optional[Sequence[int]] = None  # prompt-length ladder
+    mesh: Any = None
+    chain_axis: str = "data"
+    shard_params: bool = False
+    fused: bool = False
+    fused_interpret: Optional[bool] = None  # default: compiled only on TPU
+    return_logits: bool = False
+
+    num_traces: int = field(default=0, init=False)  # one per (rung, n) triple
+
+    def __post_init__(self):
+        from repro.cluster.serve import HostScratch
+        from repro.models.transformer import Model
+
+        leaves = jax.tree_util.tree_leaves(self.params)
+        if not leaves:
+            raise ValueError("params bank is empty")
+        self.num_chains = int(leaves[0].shape[0])
+        cfg = self.model.cfg if hasattr(self.model, "cfg") else self.model
+        self._model = Model(cfg, mesh=None, remat=False,
+                            decode_fused=self.fused,
+                            decode_interpret=self.fused_interpret)
+        self._model._require_stacked_attention("DecodeEngine")
+        if self.buckets is not None:
+            self.buckets = sorted(int(b) for b in self.buckets)
+        if self.prompt_buckets is not None:
+            self.prompt_buckets = sorted(int(b) for b in self.prompt_buckets)
+        self._scratch = HostScratch()
+        self._cache: dict = {}  # B rung -> persistent KV-cache bank
+        if self.mesh is not None:
+            n_shards = self.mesh.shape[self.chain_axis]
+            if self.num_chains % n_shards:
+                raise ValueError(
+                    f"num_chains={self.num_chains} must be divisible by mesh "
+                    f"axis {self.chain_axis!r} (size {n_shards})")
+            self.params = jax.device_put(self.params, self._bank_shardings())
+        self._run = jax.jit(self._core, static_argnums=(0, 1),
+                            donate_argnums=(3,))
+
+    # -- sharding layout ------------------------------------------------------
+    def _bank_shardings(self):
+        """Per-leaf NamedShardings for the params bank: chain axis over
+        ``chain_axis``; with ``shard_params`` the single-chain tensor-
+        parallel specs (``partition_tree``) compose behind it (2-D)."""
+        if not self.shard_params:
+            s = NamedSharding(self.mesh, P(self.chain_axis))
+            return jax.tree_util.tree_map(lambda _: s, self.params)
+        cfg = self._model.cfg
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), self.params)
+        specs = partition_tree(like, cfg.param_sharding,
+                               model_size=self.mesh.shape.get("model"),
+                               cfg=cfg)
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, P(self.chain_axis, *s)), specs,
+            is_leaf=lambda s: isinstance(s, P))
+
+    # -- the traced program ---------------------------------------------------
+    def _core(self, max_new: int, greedy: bool, params, cache, tokens,
+              prompt_len, key):
+        self.num_traces += 1  # python side effect: counts traces
+        if self.mesh is None:
+            return self._stream(params, cache, tokens, prompt_len, key,
+                                max_new, greedy, reduce=bma_logits)
+        if self.shard_params:
+            rep = NamedSharding(self.mesh, P())
+
+            def reduce(per_chain):  # pin gather-then-reduce under GSPMD
+                gathered = jax.lax.with_sharding_constraint(per_chain, rep)
+                return bma_logits(gathered)
+
+            return self._stream(params, cache, tokens, prompt_len, key,
+                                max_new, greedy, reduce=reduce)
+        ax = self.chain_axis
+
+        def body(params, cache, tokens, prompt_len, key):
+            def reduce(local):  # (C/shards, B, V) -> replicated (B, V)
+                full = jax.lax.all_gather(local, ax, axis=0, tiled=True)
+                return bma_logits(full)
+
+            return self._stream(params, cache, tokens, prompt_len, key,
+                                max_new, greedy, reduce=reduce)
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(ax), P(ax), P(), P(), P()),
+            out_specs=(P(), P(), P(ax)), **SHARD_MAP_CHECK_KW)(
+                params, cache, tokens, prompt_len, key)
+
+    def _stream(self, params, cache, tokens, prompt_len, key, max_new: int,
+                greedy: bool, *, reduce):
+        """Prefill the cache bank, then one ``lax.scan`` over the decode
+        steps — traced exactly once per (bucket, max_new) pair."""
+        model = self._model
+        prefill = jax.vmap(model.prefill_cache, in_axes=(0, None, 0, None))
+        last, cache = prefill(params, tokens, cache, prompt_len)  # (C, B, V)
+        l0 = reduce(last)
+        keys = jax.random.split(key, max_new)
+
+        def select(logp, k):
+            if greedy:
+                return jnp.argmax(logp, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(k, logp, axis=-1).astype(jnp.int32)
+
+        tok0 = select(l0, keys[0])  # (B,)
+        decode = jax.vmap(model.serve_step, in_axes=(0, 0, None, None))
+        want_logits = self.return_logits
+        none = jnp.zeros((0,), jnp.float32)
+
+        def step(carry, k_t):
+            tok, pos, cache = carry
+            per_chain, cache = decode(params, cache, tok[:, None], pos)
+            logp = reduce(per_chain[:, :, 0])  # (B, V)
+            nxt = select(logp, k_t)
+            return (nxt, pos + 1, cache), (nxt, logp if want_logits else none)
+
+        (_, _, cache), (toks, logps) = jax.lax.scan(
+            step, (tok0, prompt_len, cache), keys[1:])
+        tokens_out = jnp.concatenate([tok0[None], toks], axis=0).T
+        if want_logits:
+            logits_out = jnp.concatenate([l0[None], logps],
+                                         axis=0).transpose(1, 0, 2)
+        else:
+            logits_out = none
+        return tokens_out, logits_out, cache
+
+    # -- serving --------------------------------------------------------------
+    def _rung_cache(self, b_rung: int):
+        cache = self._cache.pop(b_rung, None)
+        if cache is None:
+            cache = self._model.init_cache_bank(self.num_chains, b_rung,
+                                                self.max_seq)
+            if self.mesh is not None:
+                cache = jax.device_put(
+                    cache, NamedSharding(self.mesh, P(self.chain_axis)))
+        return cache
+
+    def generate(self, tokens, max_new_tokens: int,
+                 key: Optional[jax.Array] = None) -> DecodeResult:
+        """Stream ``max_new_tokens`` BMA tokens from a prompt batch.
+
+        ``tokens`` is a host or device ``(B, T)`` int array (every prompt in
+        a request shares T, as in :class:`ServeEngine`'s batched queries);
+        mixed request streams bucket on both axes.  Greedy when ``key`` is
+        None, else each token is sampled from the BMA predictive law.
+        Returns host arrays trimmed to the true batch.
+        """
+        if max_new_tokens < 1:
+            raise ValueError(f"need max_new_tokens >= 1, got {max_new_tokens}")
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 2:
+            raise ValueError(f"prompt batch must be (B, T), got {tokens.shape}")
+        B, T = tokens.shape
+        b_rung = bucket_size(B, self.buckets)
+        t_rung = bucket_size(T, self.prompt_buckets)
+        cfg = self._model.cfg
+        if not cfg.sliding_window and t_rung + max_new_tokens > self.max_seq:
+            # under a sliding window the ring overwriting its oldest slot is
+            # exactly the attention semantics; without one it would silently
+            # drop real context from every remaining step
+            raise ValueError(
+                f"prompt rung {t_rung} + max_new_tokens {max_new_tokens} "
+                f"overflows the {self.max_seq}-slot cache of a full-attention "
+                "model; raise max_seq")
+        buf = self._scratch.get(("prompt", b_rung, t_rung), (b_rung, t_rung),
+                                np.int32)
+        buf[:B, :T] = tokens
+        buf[:B, T:] = tokens[:, -1:]  # right pad: causally invisible
+        buf[B:] = buf[B - 1]          # edge-replicate padded batch rows
+        cache = self._rung_cache(b_rung)
+        greedy = key is None
+        k = jnp.zeros((2,), jnp.uint32) if greedy else key
+        toks, logps, cache = self._run(
+            int(max_new_tokens), greedy, self.params, cache, buf,
+            np.asarray(T, np.int32), k)
+        self._cache[b_rung] = cache  # donated in, reused next request
+        out = np.asarray(toks)[:B]
+        return DecodeResult(
+            tokens=out,
+            logits=np.asarray(logps)[:B] if self.return_logits else None)
+
+    __call__ = generate
+
+    @property
+    def num_host_pad_allocs(self) -> int:
+        """Prompt scratch-buffer creations — one per rung pair, never one
+        per request (asserted by ``bench_decode``)."""
+        return self._scratch.allocs
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_cluster(cls, state: SamplerState | PyTree, model,
+                     **kw) -> "DecodeEngine":
+        """Stream directly from a ClusterEngine state — or any chain-stacked
+        params pytree."""
+        params = state.params if isinstance(state, SamplerState) else state
+        return cls(model=model, params=params, **kw)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, model, like: PyTree, *,
+                        num_chains: Optional[int] = None,
+                        **kw) -> "DecodeEngine":
+        """Restore a bank saved by :meth:`ClusterEngine.save_ensemble` (or
+        broadcast a single-model checkpoint to ``num_chains``) and stream
+        from it — the same checkpoint layout :class:`ServeEngine` restores.
+        ``like`` is the *single-chain* params structure."""
+        from repro.checkpoint import restore_ensemble
+
+        params = restore_ensemble(path, like, num_chains=num_chains)
+        return cls(model=model, params=params, **kw)

@@ -139,6 +139,128 @@ def ensemble_w2(positions: jnp.ndarray, target_samples: jnp.ndarray, *,
     return sinkhorn_w2(positions, target_samples, eps=eps, num_iters=num_iters)
 
 
+# ---------------------------------------------------------------------------
+# cross-chain convergence diagnostics: split-R-hat and ESS over the chain axis
+# ---------------------------------------------------------------------------
+@jax.jit
+def split_rhat(draws: jnp.ndarray) -> jnp.ndarray:
+    """Split-R-hat over the chain axis: ``draws (C, N, d) -> (d,)``.
+
+    Each chain's N draws are split in half (2C sequences of N//2), then the
+    classic Gelman-Rubin ratio of pooled-to-within variance — everything is
+    a mean/variance over the chain and time axes, i.e. exactly the cheap
+    psum-shaped reductions a sharded ensemble can afford every few commits.
+    Splitting catches the failure plain R-hat misses: chains that agree in
+    marginal law but are still drifting within themselves.
+    """
+    C, N, d = draws.shape
+    if N < 4:
+        raise ValueError(f"split-R-hat needs >= 4 draws per chain, got {N}")
+    n = N // 2
+    halves = jnp.concatenate([draws[:, :n], draws[:, n:2 * n]], axis=0)
+    halves = halves.astype(jnp.float32)                      # (2C, n, d)
+    means = jnp.mean(halves, axis=1)                         # (2C, d)
+    within = jnp.mean(jnp.var(halves, axis=1, ddof=1), axis=0)
+    between = n * jnp.var(means, axis=0, ddof=1)
+    var_plus = (n - 1) / n * within + between / n
+    return jnp.sqrt(var_plus / jnp.maximum(within, 1e-30))
+
+
+@jax.jit
+def ess(draws: jnp.ndarray) -> jnp.ndarray:
+    """Bulk effective sample size over the chain axis:
+    ``draws (C, N, d) -> (d,)``.
+
+    The multi-chain (Vehtari/Stan) estimator: per-chain autocovariances via
+    FFT, combined through ``rho_t = 1 - (W - mean acov_t) / var_plus`` —
+    ``var_plus`` includes the *between*-chain variance, so chains stuck in
+    different modes collapse the ESS even though each chain looks iid from
+    the inside — with Geyer's initial-positive-sequence truncation.
+    ``ESS ~= C*N`` for iid same-law draws; small under within-chain
+    correlation or cross-chain disagreement.
+    """
+    C, N, d = draws.shape
+    if N < 4:
+        raise ValueError(f"ESS needs >= 4 draws per chain, got {N}")
+    if C < 2:
+        raise ValueError("multi-chain ESS needs >= 2 chains")
+    x = draws.astype(jnp.float32)
+    means = jnp.mean(x, axis=1, keepdims=True)
+    xc = x - means
+    # per-chain autocovariance by FFT (biased, standard for ESS)
+    f = jnp.fft.rfft(xc, n=2 * N, axis=1)
+    acov = jnp.fft.irfft(f * jnp.conj(f), n=2 * N, axis=1)[:, :N] / N
+    mean_acov = jnp.mean(acov, axis=0)                       # (N, d)
+    within = jnp.mean(acov[:, 0], axis=0) * N / (N - 1)      # W (d,)
+    between_over_n = jnp.var(means[:, 0], axis=0, ddof=1)    # B/N (d,)
+    var_plus = (N - 1) / N * within + between_over_n
+    rho = 1.0 - (within - mean_acov) / jnp.maximum(var_plus, 1e-30)
+    # Geyer: truncate at the first negative sum of adjacent pairs
+    pairs = rho[0:2 * (N // 2):2] + rho[1:2 * (N // 2):2]    # (N//2, d)
+    positive = jnp.cumprod(pairs > 0.0, axis=0)
+    tau = -1.0 + 2.0 * jnp.sum(pairs * positive, axis=0)
+    # antithetic draws can push tau toward 0/negative; cap super-efficiency
+    # at C*N*log10(C*N) (Stan's bound) instead of letting 1/tau blow up
+    cap = C * N * max(np.log10(C * N), 1.0)
+    return jnp.minimum(C * N / jnp.maximum(tau, 1e-6), cap)
+
+
+def diagnostics_recorder(*, every: int = 1, window: int = 64) -> Callable:
+    """An Engine-style hook recording split-R-hat and ESS of the chain cloud
+    next to :func:`w2_recorder`.
+
+    Keeps a rolling window of the last ``window`` recorded clouds (one
+    ``chain_positions`` snapshot per ``every`` commits, at chunk-boundary
+    granularity like every Engine hook) and, once the window is full,
+    reduces the ``(C, window, d)`` history on device — the fixed window
+    keeps the jitted reductions at one trace.  ``flush`` emits a final row
+    from however much history exists (>= 4 snapshots).  Rows land in
+    ``hook.record`` as ``{"step", "rhat_max", "ess_min", "n_draws"}``
+    (worst coordinate each, the scalars dashboards alarm on).
+    """
+    record: list[dict] = []
+    history: list[np.ndarray] = []
+    last = [-every]
+
+    def measure(step_end: int) -> None:
+        if len(history) < 4:  # too few snapshots for a split estimate
+            return
+        draws = jnp.stack(history, axis=1)  # (C, n, d)
+        record.append({
+            "step": step_end,
+            "rhat_max": float(jnp.max(split_rhat(draws))),
+            "ess_min": float(jnp.min(ess(draws))),
+            "n_draws": int(draws.shape[1]),
+        })
+
+    def hook(step_end: int, state: SamplerState, aux) -> None:
+        if step_end - last[0] < every:
+            return
+        last[0] = step_end
+        cloud = np.asarray(chain_positions(state.params))
+        if cloud.shape[0] < 2:  # fail on the FIRST call, not window fills later
+            raise ValueError(
+                "diagnostics_recorder needs an ensemble of >= 2 chains "
+                f"(got {cloud.shape[0]})")
+        history.append(cloud)
+        if len(history) > window:
+            del history[0]
+        if len(history) == window:
+            measure(step_end)
+
+    def flush(step_end: int, state: SamplerState) -> None:
+        if not record or record[-1]["step"] < step_end:
+            if step_end > last[0]:
+                history.append(np.asarray(chain_positions(state.params)))
+                if len(history) > window:
+                    del history[0]
+            measure(step_end)
+
+    hook.record = record
+    hook.flush = flush
+    return hook
+
+
 def w2_recorder(target_samples: jnp.ndarray, *, every: int = 1,
                 **w2_kw) -> Callable:
     """A :class:`~repro.train.engine.Engine`-style hook measuring empirical

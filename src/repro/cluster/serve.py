@@ -84,7 +84,48 @@ def predictive_stats(preds: jax.Array, qs: jax.Array) -> ServeResult:
 # to training batches.
 
 
-def _pad_queries(queries: PyTree, n: int, *, copy_exact: bool) -> PyTree:
+class HostScratch:
+    """Reusable host-side pad buffers, one per (bucket rung, leaf).
+
+    Padding a request up its bucket rung is shape-varying glue that must
+    stay in numpy on the serving hot path — but a fresh ``np.concatenate``
+    per request still allocates (and touches) a buffer every call.  This
+    keeps one scratch array per ``(rung, leaf key, trailing shape, dtype)``
+    and rewrites it in place, so a steady-state request stream performs
+    **zero** per-request allocations on the padding path (``allocs`` stops
+    growing once every rung has been seen — asserted by the serve/decode
+    benches).  Reuse is safe because ``jit`` copies host arrays to device
+    synchronously at dispatch.
+    """
+
+    def __init__(self):
+        self._bufs: dict = {}
+        self.allocs = 0  # scratch-buffer creations, NOT per-request work
+
+    def get(self, key, shape, dtype) -> np.ndarray:
+        """The scratch buffer for ``key`` (caller fills it)."""
+        k = (key, tuple(shape), np.dtype(dtype).str)
+        buf = self._bufs.get(k)
+        if buf is None:
+            buf = np.empty(shape, dtype)
+            self._bufs[k] = buf
+            self.allocs += 1
+        return buf
+
+    def pad(self, x: np.ndarray, n: int, key=0) -> np.ndarray:
+        """``x`` with its leading axis padded to ``n`` by edge-replicating
+        the last row, written into the reused scratch."""
+        q = x.shape[0]
+        if q == n:
+            return x  # jit transfers host arrays; caller's buffer intact
+        buf = self.get(("pad", key), (n,) + x.shape[1:], x.dtype)
+        buf[:q] = x
+        buf[q:] = x[-1:]
+        return buf
+
+
+def _pad_queries(queries: PyTree, n: int, *, copy_exact: bool,
+                 scratch: HostScratch) -> PyTree:
     """Pad every leaf's leading (query) axis to ``n`` by edge-replicating the
     last query.  ``copy_exact`` shields an exact-bucket-size device array
     behind a copy so a donating engine never consumes the caller's buffer;
@@ -93,25 +134,23 @@ def _pad_queries(queries: PyTree, n: int, *, copy_exact: bool) -> PyTree:
     Host (numpy) queries — the common serving entry point — are padded
     with numpy: unlike an eager ``jnp.concatenate``, that compiles nothing,
     so a stream of distinct request sizes stays at one XLA program per
-    *bucket* instead of one pad program per *size*.
+    *bucket* instead of one pad program per *size*; the pad writes into the
+    engine's per-rung ``scratch`` instead of allocating per request.
     """
-
-    def pad(x):
+    leaves, treedef = jax.tree_util.tree_flatten(queries)
+    out = []
+    for i, x in enumerate(leaves):
         if not isinstance(x, jax.Array):  # host query: numpy pad, no compile
-            x = np.asarray(x)
-            extra = n - x.shape[0]
-            if extra == 0:
-                return x  # jit transfers host arrays; caller's buffer intact
-            return np.concatenate(
-                [x, np.broadcast_to(x[-1:], (extra,) + x.shape[1:])], axis=0)
+            out.append(scratch.pad(np.asarray(x), n, key=i))
+            continue
         extra = n - x.shape[0]
         if extra == 0:
             # only a donating engine needs to shield the caller's buffer
-            return x.copy() if copy_exact else x
-        return jnp.concatenate(
-            [x, jnp.broadcast_to(x[-1:], (extra,) + x.shape[1:])], axis=0)
-
-    return jax.tree_util.tree_map(pad, queries)
+            out.append(x.copy() if copy_exact else x)
+        else:
+            out.append(jnp.concatenate(
+                [x, jnp.broadcast_to(x[-1:], (extra,) + x.shape[1:])], axis=0))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 @dataclass
@@ -147,6 +186,7 @@ class ServeEngine:
         if not leaves:
             raise ValueError("params bank is empty")
         self.num_chains = int(leaves[0].shape[0])
+        self._host_scratch = HostScratch()
         if self.buckets is not None:
             self.buckets = sorted(int(b) for b in self.buckets)
         self._qs = jnp.asarray(self.quantiles, jnp.float32)
@@ -187,6 +227,29 @@ class ServeEngine:
 
         return sharded_stats
 
+    @property
+    def num_host_pad_allocs(self) -> int:
+        """Host scratch-buffer creations so far — one per (bucket rung,
+        query leaf), NOT one per request; the serve bench asserts this stops
+        growing once the stream's rungs have all been seen."""
+        return self._host_scratch.allocs
+
+    # -- streaming ------------------------------------------------------------
+    def decoder(self, model, **kw) -> "Any":
+        """Streaming entrypoint: a :class:`~repro.cluster.decode.DecodeEngine`
+        over the *same* bank, mesh, and bucket ladder — single-shot
+        predictive queries and multi-token BMA generation served from one
+        restored checkpoint.  ``model`` is the
+        :class:`~repro.models.transformer.Model` the bank parameterizes;
+        extra ``kw`` (``max_seq``, ``fused``, ...) pass through.
+        """
+        from repro.cluster.decode import DecodeEngine
+
+        kw.setdefault("buckets", self.buckets)
+        kw.setdefault("mesh", self.mesh)
+        kw.setdefault("chain_axis", self.chain_axis)
+        return DecodeEngine(model=model, params=self.params, **kw)
+
     # -- constructors ---------------------------------------------------------
     @classmethod
     def from_cluster(cls, state: SamplerState | PyTree,
@@ -222,7 +285,8 @@ class ServeEngine:
         """
         q = int(jax.tree_util.tree_leaves(queries)[0].shape[0])
         n = bucket_size(q, self.buckets)
-        padded = _pad_queries(queries, n, copy_exact=self.donate)
+        padded = _pad_queries(queries, n, copy_exact=self.donate,
+                              scratch=self._host_scratch)
         res = self._stats(self.params, padded)
         mean, var, quantiles = (np.asarray(x) for x in res)
         return ServeResult(mean=mean[:q], var=var[:q],

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused streaming decode step (the per-token hot path).
+
+One decode step of the chain-bank BMA server touches, per (chain, batch) row:
+the new token's k/v written into the ring-cache slot for the current
+position, then single-query attention over the whole cache.  Unfused, XLA
+emits (write k slot), (write v slot), (read k cache), (read v cache): four
+HBM round trips of the (smax, KV, hd) cache per layer.  This kernel fuses
+the slot update with the attention read — the cache streams through VMEM
+exactly once per operand and the updated slot never round-trips to HBM
+before being attended over.
+
+Layout: the grid walks batch rows (the vmapped chain axis of a
+:class:`~repro.cluster.decode.DecodeEngine` batches into extra grid
+dimensions via the pallas batching rule, so a (C, B) bank is a (C, B) grid);
+each step holds one ``(smax, KV, hd)`` cache tile per operand in VMEM —
+1 MiB at (1024, 8, 128) bf16, three tiles resident well inside ~16 MiB.  The
+slot select is the same broadcast-compare + select idiom as
+``delay_gather``; masking arrives precomputed as a ``(smax,)`` validity
+vector so the kernel stays free of position arithmetic.  On TPU, ``hd``
+should be a multiple of 128 lanes and ``smax`` of 8 sublanes;
+``interpret=True`` (the CPU default, matching the other kernels) has no
+tiling constraints.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, kn_ref, vn_ref, kc_ref, vc_ref, valid_ref, slot_ref,
+            o_ref, ko_ref, vo_ref):
+    _, smax, KV, hd = kc_ref.shape
+    scale = 1.0 / math.sqrt(hd)
+    slot = slot_ref[0]
+    # in-VMEM slot update: broadcast-compare + select (delay_gather idiom)
+    sel = jax.lax.broadcasted_iota(jnp.int32, (smax, KV, hd), 0) == slot
+    k = jnp.where(sel, kn_ref[0][None], kc_ref[0])
+    v = jnp.where(sel, vn_ref[0][None], vc_ref[0])
+    ko_ref[0] = k
+    vo_ref[0] = v
+    # single-query attention over the updated cache, fp32 softmax
+    q32 = q_ref[0].astype(jnp.float32) * scale            # (KV, G, hd)
+    s = jnp.einsum("ngh,cnh->ngc", q32, k.astype(jnp.float32))
+    s = jnp.where(valid_ref[...][None, None, :] == 1, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("ngc,cnh->ngh", p, v.astype(jnp.float32))
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def decode_step_2d(q, k_new, v_new, k_cache, v_cache, valid, slot,
+                   *, interpret=True):
+    """q: (B, KV, G, hd); k_new, v_new: (B, KV, hd);
+    k_cache, v_cache: (B, smax, KV, hd); valid: (smax,) int32 (1 = attend);
+    slot: (1,) int32 — the ring slot the new k/v lands in.
+
+    Returns (o (B, KV, G, hd) in q.dtype, k_cache', v_cache') with the slot
+    row replaced in both caches (aliased in place).
+    """
+    B, KV, G, hd = q.shape
+    smax = k_cache.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, KV, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, KV, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, smax, KV, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, smax, KV, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((smax,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pl.ANY),  # slot scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, smax, KV, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, smax, KV, hd), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+            jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+            jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+        ],
+        input_output_aliases={3: 1, 4: 2},  # caches update in place
+        interpret=interpret,
+    )(q, k_new, v_new, k_cache, v_cache, valid, slot)

@@ -64,6 +64,27 @@ def delay_gather_flat(history: jnp.ndarray, slots: jnp.ndarray,
     return out[:n]
 
 
+def fused_decode_step(q: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                      k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                      valid: jnp.ndarray, slot, *, interpret: bool = True):
+    """Fused streaming decode step in model layout.
+
+    q: (B, H, hd); k_new, v_new: (B, KV, hd); caches: (B, smax, KV, hd);
+    valid: (smax,) int32 slot-validity mask (already includes the window and
+    the just-written slot); slot: scalar int32 ring slot for the new token.
+    Returns (o (B, H, hd), k_cache', v_cache').
+    """
+    from repro.kernels import decode_step as ds
+
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    o, kc, vc = ds.decode_step_2d(
+        q.reshape(B, KV, H // KV, hd), k_new, v_new, k_cache, v_cache,
+        jnp.asarray(valid, jnp.int32),
+        jnp.asarray(slot, jnp.int32).reshape(1), interpret=interpret)
+    return o.reshape(B, H, hd), kc, vc
+
+
 def fused_delay_gather(ring_history: PyTree, slots: PyTree, head, depth: int,
                        *, interpret: bool = True) -> PyTree:
     """W-Icon read over a ring-buffer pytree (leaves (depth, *shape)) with

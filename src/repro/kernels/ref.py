@@ -2,6 +2,9 @@
 
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.rng import normal_from_counter
@@ -20,3 +23,25 @@ def langevin_update_ref(x: jnp.ndarray, g: jnp.ndarray, seed: jnp.ndarray,
 def delay_gather_ref(history: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
     """history: (depth, N); slots: (N,) -> (N,)."""
     return jnp.take_along_axis(history, slots[None, :], axis=0)[0]
+
+
+def decode_step_ref(q, k_new, v_new, k_cache, v_cache, valid, slot):
+    """Oracle for the fused decode step — the same slot select, fp32
+    softmax, and einsum orders as the kernel body, batched over rows.
+
+    q: (B, KV, G, hd); k_new/v_new: (B, KV, hd); caches: (B, smax, KV, hd);
+    valid: (smax,) int32; slot: scalar int32.
+    """
+    smax, _, hd = k_cache.shape[1:]
+    scale = 1.0 / math.sqrt(hd)
+    sel = jax.lax.broadcasted_iota(jnp.int32, k_cache.shape[1:], 0) == slot
+    k = jnp.where(sel[None], k_new[:, None], k_cache)
+    v = jnp.where(sel[None], v_new[:, None], v_cache)
+    q32 = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bngh,bcnh->bngc", q32, k.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :] == 1, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bngc,bcnh->bngh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype), k, v

@@ -1,4 +1,5 @@
 from repro.models.predictive import (  # noqa: F401
+    bma_logits,
     mlp_predict,
     regression_predict,
     transformer_next_token_predict,

@@ -11,14 +11,33 @@ path, not a parallel reimplementation.
 
 from __future__ import annotations
 
+import math
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.models.mlp import apply_mlp
 
 PyTree = Any
 PredictFn = Callable[[PyTree, Any], jnp.ndarray]
+
+
+def bma_logits(per_chain_logits: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Bayesian-model-averaged next-token log-probabilities.
+
+    Reduces per-chain logits ``(C, ..., V)`` to the log of the *mean* of the
+    per-chain softmax distributions — the posterior-predictive token law of
+    the chain bank — computed stably in log space.  The single source of
+    truth for the decode-time reduction: the sharded
+    :class:`~repro.cluster.decode.DecodeEngine` path calls it on the
+    all-gathered logit block, the single-device path on the vmapped output,
+    so the two are bitwise-identical by construction (the serve-module
+    parity contract).
+    """
+    C = per_chain_logits.shape[axis]
+    logp = jax.nn.log_softmax(per_chain_logits.astype(jnp.float32), axis=-1)
+    return jax.nn.logsumexp(logp, axis=axis) - jnp.float32(math.log(C))
 
 
 def regression_predict(reg) -> PredictFn:

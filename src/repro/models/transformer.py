@@ -117,8 +117,15 @@ def init_params(key, cfg) -> PyTree:
 # block application
 # ===========================================================================
 def apply_attn(p, x, cfg, positions, *, window, cache=None, cur_pos=None,
-               mesh=None, batch_axes=("data",)):
-    """cache: dict(k, v, pos) for decode; returns (y, new_kv or kv-for-prefill)."""
+               mesh=None, batch_axes=("data",), fused=False,
+               fused_interpret=True):
+    """cache: dict(k, v, pos) for decode; returns (y, new_kv or kv-for-prefill).
+
+    ``fused=True`` (decode only) routes the cached-attention read plus the
+    KV-slot write through the Pallas decode-step kernel instead of the
+    ``dynamic_update`` + ``decode_attention`` pair; ``fused_interpret``
+    picks the kernel's interpret mode (True everywhere but TPU).
+    """
     B, S, d = x.shape
     q = x @ p["wq"]
     k = x @ p["wk"]
@@ -158,18 +165,33 @@ def apply_attn(p, x, cfg, positions, *, window, cache=None, cur_pos=None,
     else:  # decode: S == 1
         smax = cache["k"].shape[1]
         slot = jnp.mod(cur_pos, smax)
-        k_cache = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, 1)
-        v_cache = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, 1)
         pos_arr = jax.lax.dynamic_update_index_in_dim(
             cache["pos"], jnp.asarray(cur_pos, cache["pos"].dtype), slot, 0)
-        o = decode_attention(q, k_cache, v_cache, pos_arr, cur_pos, window=window)
+        if fused:
+            from repro.kernels.ops import fused_decode_step
+
+            valid = (pos_arr >= 0) & (pos_arr <= cur_pos)
+            if window is not None:
+                valid &= pos_arr > (cur_pos - window)
+            o, k_cache, v_cache = fused_decode_step(
+                q[:, 0], k[:, 0], v[:, 0], cache["k"], cache["v"],
+                valid.astype(jnp.int32), slot, interpret=fused_interpret)
+            o = o[:, None]
+        else:
+            k_cache = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0],
+                                                          slot, 1)
+            v_cache = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0],
+                                                          slot, 1)
+            o = decode_attention(q, k_cache, v_cache, pos_arr, cur_pos,
+                                 window=window)
         new_kv = {"k": k_cache, "v": v_cache, "pos": pos_arr}
     y = o.reshape(B, S, cfg.q_dim) @ p["wo"]
     return y, new_kv
 
 
 def apply_block(p, x, cfg, block: str, positions, *, mesh=None, batch_axes=("data",),
-                fsdp_axes=("data",), cache=None, cur_pos=None):
+                fsdp_axes=("data",), cache=None, cur_pos=None, fused=False,
+                fused_interpret=True):
     """Returns (x, aux_loss, new_cache)."""
     rs = cfg.residual_scale
     aux = jnp.float32(0.0)
@@ -181,7 +203,8 @@ def apply_block(p, x, cfg, block: str, positions, *, mesh=None, batch_axes=("dat
         attn_out, kv = apply_attn(p["attn"], h, cfg, positions, window=window,
                                   cache=None if cache is None else cache["attn"],
                                   cur_pos=cur_pos, mesh=mesh,
-                                  batch_axes=batch_axes)
+                                  batch_axes=batch_axes, fused=fused,
+                                  fused_interpret=fused_interpret)
         if block == "hymba_mlp":
             if cache is None:
                 ssm_out = ssm_lib.apply_ssm(p["ssm"], h, cfg)
@@ -239,12 +262,21 @@ class Model:
     """Config-driven decoder.  Methods are pure; jit at the call site."""
 
     def __init__(self, cfg, mesh=None, batch_axes=("data",),
-                 fsdp_axes=("data",), remat: bool = True):
+                 fsdp_axes=("data",), remat: bool = True,
+                 decode_fused: bool = False, decode_interpret=None):
         self.cfg = cfg
         self.mesh = mesh
         self.batch_axes = tuple(batch_axes)
         self.fsdp_axes = tuple(fsdp_axes)
         self.remat = remat
+        # opt-in Pallas fused decode step (cached-attention read + KV slot
+        # write in one kernel); the unfused path is the parity reference.
+        # interpret mode follows the repo's kernel convention: compiled on
+        # TPU, interpreted everywhere else, overridable per Model
+        self.decode_fused = decode_fused
+        self.decode_interpret = (jax.default_backend() != "tpu"
+                                 if decode_interpret is None
+                                 else decode_interpret)
 
     # -- embedding ------------------------------------------------------------
     def embed(self, params, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -357,6 +389,64 @@ class Model:
         return [entry_for(cfg.block_pattern[i % len(cfg.block_pattern)])
                 for i in range(L)]
 
+    def _require_stacked_attention(self, what: str):
+        cfg = self.cfg
+        if len(cfg.block_pattern) != 1 or cfg.block_pattern[0] not in (
+                "attn_mlp", "attn_moe"):
+            raise ValueError(
+                f"{what} needs a homogeneous attention stack "
+                f"(block_pattern ('attn_mlp',) or ('attn_moe',)), got "
+                f"{cfg.block_pattern}; SSM/xLSTM states have no prefill-"
+                "fillable KV cache")
+        if cfg.frontend:
+            raise ValueError(f"{what} serves token prompts only "
+                             f"(frontend={cfg.frontend!r})")
+
+    def init_cache_bank(self, num_chains: int, batch_size: int, max_seq: int):
+        """Chain-stacked decode cache: :meth:`init_cache` with every leaf
+        gaining a leading ``(num_chains,)`` axis — the per-chain KV-cache
+        bank a :class:`~repro.cluster.decode.DecodeEngine` allocates once
+        per bucket rung and donates across serve steps."""
+        from repro.utils import tree_broadcast_leading
+
+        self._require_stacked_attention("init_cache_bank")
+        return tree_broadcast_leading(self.init_cache(batch_size, max_seq),
+                                      num_chains)
+
+    def prefill_cache(self, params, tokens, cache, prompt_len):
+        """Padded-prompt prefill *into* a persistent decode cache.
+
+        ``tokens`` is a bucket-padded prompt batch ``(B, T_pad)`` whose real
+        length is the traced scalar ``prompt_len`` (<= T_pad); right-padding
+        never leaks into real positions because attention is causal.  The
+        prompt's per-layer KV lands in cache slots ``[0, T_pad)`` and slots
+        at/after ``prompt_len`` are marked empty (pos = -1), so the pad
+        entries stay masked until the decode loop overwrites them in ring
+        order.  Returns ``(logits at position prompt_len - 1 (B, V), cache)``.
+
+        Single-chain; a chain bank vmaps this together with
+        :meth:`serve_step`.
+        """
+        self._require_stacked_attention("prefill_cache")
+        T = tokens.shape[1]
+        smax = cache["attn"]["k"].shape[2]  # (L, B, smax, KV, hd)
+        if T > smax:
+            raise ValueError(
+                f"padded prompt length {T} exceeds the cache's {smax} slots "
+                "(raise max_seq, or loosen the prompt bucket ladder)")
+        logits, _, (k, v) = self.forward(params, {"tokens": tokens},
+                                         want_kv=True)
+        last = jax.lax.dynamic_index_in_dim(logits, prompt_len - 1, axis=1,
+                                            keepdims=False)  # (B, V)
+        L = cache["attn"]["k"].shape[0]
+        pos = jnp.where(jnp.arange(smax) < prompt_len, jnp.arange(smax),
+                        -1).astype(jnp.int32)
+        return last, {"attn": {
+            "k": cache["attn"]["k"].at[:, :, :T].set(k),
+            "v": cache["attn"]["v"].at[:, :, :T].set(v),
+            "pos": jnp.broadcast_to(pos[None], (L, smax)),
+        }}
+
     def serve_step(self, params, cache, tokens, cur_pos):
         """One decode step. tokens: (B, 1) int32; cur_pos: scalar int32.
 
@@ -370,7 +460,8 @@ class Model:
             return apply_block(p, x, cfg, block, positions, mesh=self.mesh,
                                batch_axes=self.batch_axes,
                                fsdp_axes=self.fsdp_axes, cache=c,
-                               cur_pos=cur_pos)
+                               cur_pos=cur_pos, fused=self.decode_fused,
+                               fused_interpret=self.decode_interpret)
 
         if "stack" in params:
             block = cfg.block_pattern[0]

@@ -1,6 +1,8 @@
 """Unit tests for the CI perf-regression gates in scripts/check_bench.py:
-the cluster gate (speedup / W2-at-budget / batch-policy advantage) and the
-serve gate (QPS floor, p99 ceiling, retrace flag, row presence)."""
+the cluster gate (speedup / W2-at-budget / batch-policy advantage), the
+serve gate (QPS floor, p99 ceiling, retrace flag, row presence), and the
+decode gate (tokens/sec floor, per-token p99 ceiling, exact trace-count
+match, sublinearity)."""
 
 import copy
 import json
@@ -119,6 +121,99 @@ def test_serve_gate_custom_tolerances(serve_baseline):
     tight["rows"][0]["qps"] *= 0.85
     assert check_bench.check(tight, serve_baseline) == []
     assert check_bench.check(tight, serve_baseline, tol_qps=0.10) != []
+
+
+# ---------------------------------------------------------------------------
+# decode gate
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def decode_baseline():
+    return {
+        "kind": "decode",
+        "config": {"requests": 12, "max_new": 8, "seed": 0},
+        "rows": [
+            {"chains": 1, "shards": 1, "tokens_per_s": 5000.0,
+             "per_token_p50_ms": 0.8, "per_token_p99_ms": 1.5, "traces": 5,
+             "retraced_in_stream": False, "pad_allocs_in_stream": 0},
+            {"chains": 8, "shards": 8, "tokens_per_s": 3000.0,
+             "per_token_p50_ms": 1.4, "per_token_p99_ms": 2.5, "traces": 5,
+             "retraced_in_stream": False, "pad_allocs_in_stream": 0},
+        ],
+        "sublinear": {"chains": 8, "c1_per_token_ms": 0.8,
+                      "sharded_per_token_ms": 1.4, "linear_bound_ms": 6.4,
+                      "speedup_vs_linear": 4.57, "pass": True},
+    }
+
+
+def test_decode_gate_passes_within_band(decode_baseline):
+    ok = copy.deepcopy(decode_baseline)
+    ok["rows"][0]["tokens_per_s"] *= 0.5   # inside the wide 75% band
+    ok["rows"][1]["per_token_p99_ms"] *= 3  # inside the 4x band
+    assert check_bench.check(ok, decode_baseline) == []
+
+
+def test_decode_gate_fails_on_seeded_tokens_per_s_regression(decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    bad["rows"][0]["tokens_per_s"] = 5000.0 * 0.2  # below the 25% floor
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "tokens/sec regressed" in msgs[0]
+    assert "chains=1 shards=1" in msgs[0]
+
+
+def test_decode_gate_fails_on_seeded_p99_regression(decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    bad["rows"][1]["per_token_p99_ms"] = 2.5 * 6.0  # above the 5x ceiling
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "per-token p99 regressed" in msgs[0]
+
+
+def test_decode_gate_requires_exact_trace_count_match(decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    bad["rows"][0]["traces"] = 6  # no band: one extra program compiled
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "trace count changed" in msgs[0]
+    bad["rows"][0]["traces"] = 5
+    bad["rows"][1]["retraced_in_stream"] = True
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "retraced inside" in msgs[0]
+    bad["rows"][1]["retraced_in_stream"] = False
+    bad["rows"][1]["pad_allocs_in_stream"] = 3
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "allocated per request" in msgs[0]
+
+
+def test_decode_gate_fails_when_sublinearity_lost(decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    bad["sublinear"]["pass"] = False
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "sublinearity" in msgs[0]
+    bad["sublinear"] = None  # sharded rows vanished entirely
+    assert len(check_bench.check(bad, decode_baseline)) == 1
+
+
+def test_decode_gate_fails_on_missing_row_and_custom_band(decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    del bad["rows"][1]
+    bad["sublinear"] = decode_baseline["sublinear"]
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "row missing" in msgs[0]
+    tight = copy.deepcopy(decode_baseline)
+    tight["rows"][0]["tokens_per_s"] *= 0.9
+    assert check_bench.check(tight, decode_baseline) == []
+    assert check_bench.check(tight, decode_baseline, tol_tps=0.05) != []
+
+
+def test_cli_gates_the_committed_decode_baseline_against_itself(tmp_path):
+    root = os.path.join(os.path.dirname(__file__), "..")
+    baseline = os.path.join(root, "benchmarks", "baselines",
+                            "BENCH_decode.json")
+    assert check_bench.main([baseline, "--baseline", baseline]) == 0
+    with open(baseline) as f:
+        payload = json.load(f)
+    payload["rows"][0]["traces"] += 1
+    fresh = tmp_path / "BENCH_decode.json"
+    fresh.write_text(json.dumps(payload))
+    assert check_bench.main([str(fresh), "--baseline", baseline]) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -259,3 +259,82 @@ def test_sharded_matches_unsharded_on_debug_mesh():
     assert res["bitwise_equal"], res
     assert res["chain_axis_sharded"], res
     assert res["traces"] == 1, res
+
+
+# ---------------------------------------------------------------------------
+# cross-chain diagnostics: split-R-hat and ESS over the chain axis
+# ---------------------------------------------------------------------------
+def test_split_rhat_near_one_for_iid_and_large_for_separated():
+    from repro.cluster import split_rhat
+
+    rng = np.random.default_rng(0)
+    iid = jnp.asarray(rng.standard_normal((8, 128, 3)), jnp.float32)
+    r = np.asarray(split_rhat(iid))
+    assert r.shape == (3,)
+    assert np.all(np.abs(r - 1.0) < 0.05)
+    separated = iid + jnp.arange(8, dtype=jnp.float32)[:, None, None] * 3.0
+    assert np.all(np.asarray(split_rhat(separated)) > 2.0)
+
+
+def test_split_rhat_catches_within_chain_drift():
+    """Splitting each chain in half flags chains that agree with each other
+    but are still moving — plain R-hat's blind spot."""
+    from repro.cluster import split_rhat
+
+    rng = np.random.default_rng(1)
+    iid = jnp.asarray(rng.standard_normal((8, 128, 2)), jnp.float32)
+    drifting = iid + jnp.linspace(0.0, 5.0, 128)[None, :, None]
+    assert np.all(np.asarray(split_rhat(drifting)) > 1.2)
+
+
+def test_ess_full_for_iid_and_collapsed_for_correlated():
+    from repro.cluster import ess
+
+    rng = np.random.default_rng(2)
+    C_, N_ = 8, 128
+    iid = jnp.asarray(rng.standard_normal((C_, N_, 2)), jnp.float32)
+    e = np.asarray(ess(iid))
+    assert e.shape == (2,)
+    assert np.all(e > 0.7 * C_ * N_)  # iid: near the nominal C*N
+    phi = 0.95
+    x = np.zeros((C_, N_, 2), np.float32)
+    eps = rng.standard_normal((C_, N_, 2)).astype(np.float32)
+    for t in range(1, N_):
+        x[:, t] = phi * x[:, t - 1] + np.sqrt(1 - phi**2) * eps[:, t]
+    assert np.all(np.asarray(ess(jnp.asarray(x))) < 0.2 * C_ * N_)
+
+
+def test_ess_collapses_for_chains_stuck_in_different_modes():
+    """The between-chain variance term (Vehtari/Stan) matters: chains that
+    are each iid around a *different* mode look uncorrelated from the
+    inside but carry almost no information about the pooled law."""
+    from repro.cluster import ess
+
+    rng = np.random.default_rng(3)
+    C_, N_ = 8, 128
+    iid = jnp.asarray(rng.standard_normal((C_, N_, 2)), jnp.float32)
+    stuck = iid + jnp.arange(C_, dtype=jnp.float32)[:, None, None] * 5.0
+    assert np.all(np.asarray(ess(stuck)) < 0.05 * C_ * N_)
+    assert np.all(np.asarray(ess(iid)) > 0.7 * C_ * N_)  # unchanged for iid
+
+
+def test_diagnostics_recorder_hook_records_next_to_w2(quad, quad_sampler,
+                                                      schedules):
+    """diagnostics_recorder rides the same hook seam as w2_recorder and
+    emits (rhat_max, ess_min) rows once its window fills, plus a flush row."""
+    from repro.cluster import diagnostics_recorder
+
+    hook = diagnostics_recorder(every=1, window=8)
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=2,
+                           batch_fn=lambda k: quad.sample_batch(k, 8),
+                           hooks=(hook,))
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(0), jitter=0.5)
+    state, _ = engine.run(state, steps=24, schedule=schedules[:1] * C,
+                          key=jax.random.PRNGKey(1))
+    hook.flush(24, state)
+    assert hook.record, "window never filled"
+    row = hook.record[-1]
+    assert set(row) == {"step", "rhat_max", "ess_min", "n_draws"}
+    assert row["step"] == 24
+    assert np.isfinite(row["rhat_max"]) and row["rhat_max"] > 0.0
+    assert 0.0 < row["ess_min"] <= C * row["n_draws"]

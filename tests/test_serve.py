@@ -106,6 +106,27 @@ def test_padding_never_consumes_the_callers_buffer(reg, bank):
     np.testing.assert_allclose(np.asarray(z)[-1], 1.0)  # not donated away
 
 
+def test_host_padding_reuses_one_scratch_per_rung(reg, bank, reference):
+    """Host-query padding must allocate one scratch buffer per (rung, leaf)
+    and then rewrite it in place — zero allocations per request — without
+    perturbing the statistics."""
+    engine = ServeEngine(predict_fn=regression_predict(reg), params=bank)
+    rng = np.random.default_rng(0)
+    first = rng.uniform(-1.0, 1.0, 5).astype(np.float32)
+    engine(first)
+    assert engine.num_host_pad_allocs == 1  # rung 8 scratch created
+    buf0 = engine._host_scratch.get(("pad", 0), (8,), np.float32)
+    for i in range(6):  # same rung, distinct sizes: no new allocations
+        z = rng.uniform(-1.0, 1.0, 5 + (i % 3)).astype(np.float32)
+        res, ref = engine(z), reference(jnp.asarray(z))
+        for got, want in zip(res, ref):
+            assert np.array_equal(np.asarray(got), np.asarray(want)), i
+    assert engine.num_host_pad_allocs == 1
+    assert engine._host_scratch.get(("pad", 0), (8,), np.float32) is buf0
+    engine(rng.uniform(-1.0, 1.0, 12).astype(np.float32))  # rung 16
+    assert engine.num_host_pad_allocs == 2
+
+
 def test_pytree_queries_pad_and_slice(reg, bank):
     """Dict-shaped query batches bucket on the shared leading axis."""
 
