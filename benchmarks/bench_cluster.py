@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import instrument
 from repro.cluster import (
     ClusterEngine,
     WorkerSchedule,
@@ -70,9 +71,12 @@ def _run_ensemble(sampler, schedule, *, num_chains, steps, chunk, target,
     engine.hooks = [hook]
     state = engine.init(jnp.zeros(d), jax.random.PRNGKey(seed), jitter=jitter)
     t0 = time.time()
-    state, _ = engine.run(state, steps=steps, schedule=schedule)
-    jax.block_until_ready(state.params)
-    return hook.record, time.time() - t0
+    # traces inside the timed run are reported (not gated: a ragged final
+    # chunk legitimately compiles one extra program the warm-up never saw)
+    with instrument() as rep:
+        state, _ = engine.run(state, steps=steps, schedule=schedule)
+        jax.block_until_ready(state.params)
+    return hook.record, time.time() - t0, rep.num_traces
 
 
 def _policy_curves(rec):
@@ -137,15 +141,17 @@ def run_batch_policies(num_chains: int = 64, workers: int = 8,
         state = engine.init(jnp.zeros(d), jax.random.PRNGKey(seed + 2),
                             jitter=2.0)
         t0 = time.time()
-        state, _ = engine.run(state, steps=steps, schedule=scheds, data=data,
-                              **run_kw)
-        jax.block_until_ready(state.params)
-        return hook.record, time.time() - t0
+        with instrument() as rep:
+            state, _ = engine.run(state, steps=steps, schedule=scheds,
+                                  data=data, **run_kw)
+            jax.block_until_ready(state.params)
+        return hook.record, time.time() - t0, rep.num_traces
 
-    fixed_rec, fixed_dev_s = arm(
+    fixed_rec, fixed_dev_s, fixed_traces = arm(
         "explicit", fixed_scheds, fixed_commits,
         batch_sizes=np.full(fixed_commits, base_batch))
-    het_rec, het_dev_s = arm("inverse-speed", het_scheds, het_steps)
+    het_rec, het_dev_s, het_traces = arm("inverse-speed", het_scheds,
+                                         het_steps)
 
     final_w2_fixed = fixed_rec[-1]["w2"]
     final_w2_het = het_rec[-1]["w2"]
@@ -177,6 +183,7 @@ def run_batch_policies(num_chains: int = 64, workers: int = 8,
                                     else None),
         "device_wall_s": {"fixed": round(fixed_dev_s, 3),
                           "het": round(het_dev_s, 3)},
+        "traces_in_run": {"fixed": fixed_traces, "het": het_traces},
     }
 
 
@@ -194,7 +201,7 @@ def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
 
     async_sampler = samplers.sgld("consistent", grad, gamma=gamma,
                                   sigma=sigma, tau=max(tau, 1))
-    async_rec, async_dev_s = _run_ensemble(
+    async_rec, async_dev_s, async_traces = _run_ensemble(
         async_sampler, async_scheds, num_chains=num_chains, steps=commits,
         chunk=chunk, target=target, seed=seed + 2, jitter=2.0)
 
@@ -204,7 +211,7 @@ def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
     sync_sched = WorkerSchedule.from_trace(sync_trace)
     sync_sampler = samplers.sgld("sync", grad, gamma=gamma, sigma=sigma)
     sync_chunk = max(1, rounds // chunks)
-    sync_rec, sync_dev_s = _run_ensemble(
+    sync_rec, sync_dev_s, sync_traces = _run_ensemble(
         sync_sampler, sync_sched, num_chains=num_chains, steps=rounds,
         chunk=sync_chunk, target=target, seed=seed + 2, jitter=2.0)
 
@@ -228,6 +235,7 @@ def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
         "final_w2_sync": sync_rec[-1]["w2"],
         "device_wall_s": {"async": round(async_dev_s, 3),
                           "sync": round(sync_dev_s, 3)},
+        "traces_in_run": {"async": async_traces, "sync": sync_traces},
     }
 
 

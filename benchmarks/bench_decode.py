@@ -25,6 +25,7 @@ from dataclasses import replace
 import jax
 import numpy as np
 
+from repro.analysis import instrument
 from repro.cluster import DecodeEngine
 from repro.configs import get_reduced
 from repro.models.transformer import Model, init_params
@@ -59,17 +60,18 @@ def _measure(engine: DecodeEngine, *, requests: int, max_batch: int,
                     for b, t in shapes})
     for b, t in rungs:  # compile every (bucket, max_new) pair off the clock
         engine.generate(np.zeros((b, t), np.int32), max_new)
-    traces_warm = engine.num_traces
-    allocs_warm = engine.num_host_pad_allocs
 
     lat = []
     n_tokens = 0
     t_all = time.time()
-    for prompt in stream:
-        t0 = time.time()
-        res = engine.generate(prompt, max_new)
-        lat.append(time.time() - t0)
-        n_tokens += res.tokens.size
+    # any trace or pad alloc inside this block is a stream-path regression;
+    # the report's stream_flags() feed the row fields check_bench gates on
+    with instrument() as rep:
+        for prompt in stream:
+            t0 = time.time()
+            res = engine.generate(prompt, max_new)
+            lat.append(time.time() - t0)
+            n_tokens += res.tokens.size
     total_s = time.time() - t_all
     per_tok_ms = np.asarray(lat) * 1e3 / max_new
     p50, p99 = (float(np.percentile(per_tok_ms, p)) for p in (50, 99))
@@ -81,8 +83,7 @@ def _measure(engine: DecodeEngine, *, requests: int, max_batch: int,
         "tokens": n_tokens,
         "rungs": len(rungs),
         "traces": engine.num_traces,
-        "retraced_in_stream": engine.num_traces > traces_warm,
-        "pad_allocs_in_stream": engine.num_host_pad_allocs - allocs_warm,
+        **rep.stream_flags(),
         "tokens_per_s": round(n_tokens / total_s, 1),
         "per_token_p50_ms": round(p50, 3),
         "per_token_p99_ms": round(p99, 3),

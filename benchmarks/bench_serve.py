@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import instrument
 from repro.cluster import ServeEngine, bucket_size
 from repro.core import PolyRegression
 from repro.models import regression_predict
@@ -50,15 +51,16 @@ def _measure(engine: ServeEngine, *, requests: int, max_queries: int,
     for n in buckets:  # compile every bucket off the clock
         jax.block_until_ready(engine(np.zeros(n, np.float32)).mean)
         engine(np.ones(max(n - 1, 1), np.float32))  # warm the pad scratch too
-    traces_warm = engine.num_traces
-    allocs_warm = engine.num_host_pad_allocs
 
     lat = []
     t_all = time.time()
-    for q in stream:
-        t0 = time.time()
-        jax.block_until_ready(engine(q).mean)
-        lat.append(time.time() - t0)
+    # any trace or pad alloc inside this block is a stream-path regression;
+    # the report's stream_flags() feed the row fields check_bench gates on
+    with instrument() as rep:
+        for q in stream:
+            t0 = time.time()
+            jax.block_until_ready(engine(q).mean)
+            lat.append(time.time() - t0)
     total_s = time.time() - t_all
     lat_ms = np.asarray(lat) * 1e3
     p50, p90, p99 = (float(np.percentile(lat_ms, p)) for p in (50, 90, 99))
@@ -70,10 +72,9 @@ def _measure(engine: ServeEngine, *, requests: int, max_queries: int,
         "queries": int(sizes.sum()),
         "buckets": len(buckets),
         "traces": engine.num_traces,
-        "retraced_in_stream": engine.num_traces > traces_warm,
         # host padding must reuse the per-rung scratch: zero allocations
         # (device or host) per request once the rungs are warm
-        "pad_allocs_in_stream": engine.num_host_pad_allocs - allocs_warm,
+        **rep.stream_flags(),
         "qps": round(float(sizes.sum()) / total_s, 1),
         "requests_per_s": round(requests / total_s, 1),
         "p50_ms": round(p50, 3),

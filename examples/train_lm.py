@@ -81,7 +81,7 @@ def main():
 
     last_log = [-args.log_every]
 
-    def tok_log(step_end, state, aux):
+    def tok_log(step_end, _state, aux):
         if step_end - last_log[0] < args.log_every and step_end != args.steps:
             return
         last_log[0] = step_end

@@ -40,6 +40,11 @@ absolute speed; the *structural* invariants below are exact):
 - sharded decode must stay sublinear in C (``sublinear.pass``) wherever the
   baseline recorded it.
 
+The structural fields the exact gates read (``traces``,
+``retraced_in_stream``, ``pad_allocs_in_stream``) are produced by the
+benchmarks from :mod:`repro.analysis.instrument` reports — a trace or a
+host pad allocation inside the timed stream raises the flag.
+
 To accept an intentional change, re-run the benchmark and commit the new
 JSON as the baseline.
 
@@ -124,7 +129,7 @@ def check_serve(current: dict, baseline: dict, *, tol_qps: float,
                 tol_p99: float) -> list[str]:
     """Serve-bench regressions (empty list = pass)."""
 
-    def extra(label, row, row0):
+    def extra(label, row, _row0):
         if row.get("retraced_in_stream"):
             return [f"{label}: serve path retraced inside the request "
                     "stream (more than one trace per shape bucket)"]

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""jaxlint CLI — run the repo's JAX/Pallas invariant linter.
+
+    python scripts/jaxlint.py src benchmarks examples
+    python scripts/jaxlint.py --baseline src > jaxlint-baseline.json
+
+Exit status is 1 when any non-suppressed finding exists (0 with
+``--baseline``, which always writes the full JSON report, suppressed
+findings included, for the CI artifact).
+
+Pure stdlib + the linter module itself — no JAX import, so the lint CI
+job can run it without the accelerator stack.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# runnable straight from a checkout, no install step
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.lint import RULES, lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="jaxlint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("paths", nargs="+",
+                        help="files or directories to lint")
+    parser.add_argument("--baseline", action="store_true",
+                        help="emit the full findings report (suppressed "
+                             "included) as JSON on stdout and exit 0")
+    parser.add_argument("--select", default=None,
+                        help="comma-separated rule ids (default: all)")
+    parser.add_argument("--exclude", action="append", default=[],
+                        help="path component to skip (repeatable)")
+    parser.add_argument("--show-suppressed", action="store_true",
+                        help="also print pragma-suppressed findings")
+    args = parser.parse_args(argv)
+
+    selected = (set(r.strip().upper() for r in args.select.split(","))
+                if args.select else set(RULES) | {"JL000"})
+    findings = [f for f in lint_paths(args.paths, exclude=args.exclude)
+                if f.rule in selected]
+
+    if args.baseline:
+        report = {
+            "rules": RULES,
+            "findings": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "col": f.col, "message": f.message,
+                 "suppressed": f.suppressed}
+                for f in findings
+            ],
+            "counts": {
+                "active": sum(not f.suppressed for f in findings),
+                "suppressed": sum(f.suppressed for f in findings),
+            },
+        }
+        json.dump(report, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+        return 0
+
+    active = [f for f in findings if not f.suppressed]
+    shown = findings if args.show_suppressed else active
+    for f in shown:
+        print(f.format())
+    n_sup = len(findings) - len(active)
+    summary = f"jaxlint: {len(active)} finding(s)"
+    if n_sup:
+        summary += f", {n_sup} suppressed"
+    print(summary, file=sys.stderr)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""repro.analysis — static analysis and runtime instrumentation.
+
+Two halves of one correctness story for the delayed-gradient executor and
+the serving stack built on it:
+
+- :mod:`repro.analysis.lint` is an AST linter for the JAX/Pallas invariants
+  no off-the-shelf tool checks — retrace hazards, use-after-donation, RNG
+  key reuse, host syncs inside traced code, in-place Pallas kernels without
+  ``input_output_aliases``, ``shard_map`` specs naming axes the mesh lacks
+  (rules JL001–JL006, ``scripts/jaxlint.py`` is the CLI, the CI lint job
+  runs it over ``src benchmarks examples``);
+- :mod:`repro.analysis.instrument` is the runtime half: one event bus for
+  jit traces, host pad-scratch allocations, XLA compile events, and
+  donation warnings, consumed by the engines, the benchmarks, and the
+  tests instead of per-site counters.
+
+See ``ANALYSIS.md`` for the rule catalog and pragma syntax.
+"""
+
+from repro.analysis.instrument import (  # noqa: F401
+    Counters,
+    Report,
+    counters,
+    instrument,
+)
+from repro.analysis.lint import (  # noqa: F401
+    Finding,
+    RULES,
+    lint_file,
+    lint_paths,
+    lint_source,
+)

@@ -1,0 +1,218 @@
+"""Unified runtime instrumentation for the repo's compiled hot paths.
+
+Every engine in the system promises the same three invariants on its hot
+path: **one trace per shape rung** (a mixed request/commit stream must not
+retrace), **zero per-request host pad allocations** (padding writes into a
+per-rung scratch), and **donated carries** (state buffers update in place).
+Before this module each engine kept its own ad-hoc counters and each
+benchmark hand-diffed them around the measured stream; now there is one
+event bus:
+
+- engines own a :class:`Counters` handle (``counters("ServeEngine")``) and
+  report every jit trace (:meth:`Counters.trace`, labelled per compiled
+  function) and every host pad-scratch creation (:meth:`Counters.pad_alloc`)
+  through it — the engines' public ``num_traces`` / ``num_host_pad_allocs``
+  are thin views over the handle;
+- callers wrap a region in :func:`instrument` and get a :class:`Report` of
+  everything that happened inside it: per-(engine, function) trace counts,
+  pad allocs, XLA compile events (via :mod:`jax`'s monitoring listener,
+  best-effort), and captured donation warnings.  A measured request stream
+  whose rungs are warm must produce an *empty* report —
+  :meth:`Report.stream_flags` is that assertion packaged for the benchmark
+  JSON rows, and ``scripts/check_bench.py`` gates on its fields.
+
+The context manager nests (inner regions report a subset of outer ones) and
+costs two dict updates per event, so it is safe to leave on in production
+serving loops.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+from collections import Counter
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Optional
+
+__all__ = ["Counters", "Report", "counters", "instrument"]
+
+_lock = threading.Lock()
+_active: list["Report"] = []  # instrument() stack, innermost last
+
+
+class Counters:
+    """Per-engine instrument handle: monotone trace / pad-alloc counters.
+
+    ``trace(fn)`` is called from inside a jitted function body (a Python
+    side effect runs once per trace, never per execution), ``pad_alloc()``
+    from the host padding path whenever a new scratch buffer is created.
+    Both also broadcast into every active :func:`instrument` region.
+    """
+
+    __slots__ = ("label", "traces", "pad_allocs", "per_fn")
+
+    def __init__(self, label: str):
+        self.label = label
+        self.traces = 0
+        self.pad_allocs = 0
+        self.per_fn: Counter = Counter()  # compiled-function name -> traces
+
+    def trace(self, fn: str = "") -> None:
+        """Record one jit trace of compiled function ``fn``."""
+        with _lock:
+            self.traces += 1
+            self.per_fn[fn] += 1
+            for rep in _active:
+                rep._traces[(self.label, fn)] += 1
+
+    def pad_alloc(self) -> None:
+        """Record one host pad-scratch buffer creation."""
+        with _lock:
+            self.pad_allocs += 1
+            for rep in _active:
+                rep._pad_allocs[self.label] += 1
+
+
+def counters(label: str) -> Counters:
+    """A fresh per-engine instrument handle."""
+    return Counters(label)
+
+
+@dataclass
+class Report:
+    """Everything the instrument bus saw inside one :func:`instrument`
+    region.  ``num_traces``/``num_pad_allocs`` are the totals; the dict
+    views break them down per (engine label, compiled function)."""
+
+    _traces: Counter = field(default_factory=Counter)
+    _pad_allocs: Counter = field(default_factory=Counter)
+    #: XLA jaxpr-trace events observed by jax's monitoring bus (best-effort:
+    #: 0 when the listener API is unavailable; a cross-check that the
+    #: engines' python-side counters are not lying about retraces)
+    xla_compiles: int = 0
+    #: "Some donated buffers were not usable" / "Donation is not implemented"
+    #: warnings captured inside the region
+    donation_warnings: list = field(default_factory=list)
+
+    @property
+    def num_traces(self) -> int:
+        return sum(self._traces.values())
+
+    @property
+    def num_pad_allocs(self) -> int:
+        return sum(self._pad_allocs.values())
+
+    @property
+    def traces(self) -> dict:
+        """{(engine label, compiled fn): trace count} inside the region."""
+        return dict(self._traces)
+
+    @property
+    def pad_allocs(self) -> dict:
+        """{engine label: pad-scratch creations} inside the region."""
+        return dict(self._pad_allocs)
+
+    def traces_for(self, label: str) -> int:
+        return sum(n for (lbl, _), n in self._traces.items() if lbl == label)
+
+    def stream_flags(self) -> dict:
+        """The hot-stream invariant, packaged for a benchmark JSON row:
+        a measured stream over warm rungs must trace nothing and allocate
+        no pad scratch.  ``check_bench`` gates on these fields."""
+        return {
+            "retraced_in_stream": self.num_traces > 0,
+            "pad_allocs_in_stream": self.num_pad_allocs,
+        }
+
+    def to_dict(self) -> dict:
+        """JSON-serializable summary (keys flattened to 'label/fn')."""
+        return {
+            "traces": {f"{lbl}/{fn}" if fn else lbl: n
+                       for (lbl, fn), n in sorted(self._traces.items())},
+            "pad_allocs": {lbl: n
+                           for lbl, n in sorted(self._pad_allocs.items())},
+            "xla_compiles": self.xla_compiles,
+            "donation_warnings": len(self.donation_warnings),
+        }
+
+
+def _install_compile_listener(report: Report):
+    """Count XLA jaxpr-trace events into ``report`` via jax's monitoring
+    bus.  Returns an uninstall thunk; a no-op pair when the (private,
+    version-dependent) API is missing."""
+    try:
+        from jax._src import monitoring
+        from jax._src.dispatch import JAXPR_TRACE_EVENT
+    except ImportError:
+        return lambda: None
+
+    def listener(event: str, _duration: float, **_kw) -> None:
+        if event == JAXPR_TRACE_EVENT:
+            report.xla_compiles += 1
+
+    try:
+        monitoring.register_event_duration_secs_listener(listener)
+    except Exception:
+        return lambda: None
+
+    def uninstall():
+        try:
+            monitoring._unregister_event_duration_listener_by_callback(
+                listener)
+        except Exception:
+            pass
+
+    return uninstall
+
+
+@contextmanager
+def instrument(*, transfer_guard: Optional[str] = None,
+               capture_donation_warnings: bool = True):
+    """Collect every engine trace / pad-alloc event in the ``with`` body
+    into a :class:`Report`.
+
+    ``transfer_guard`` optionally applies :func:`jax.transfer_guard` to the
+    region (``"disallow"`` turns an implicit host sync inside the measured
+    stream into a hard error — the runtime teeth behind lint rule JL004;
+    ``"log"`` merely reports).  ``capture_donation_warnings`` records
+    donation-related warnings into the report instead of letting them
+    scroll past (all other warnings are re-emitted on exit).
+
+        with instrument() as rep:
+            for q in stream:
+                engine(q)
+        assert rep.num_traces == 0          # warm stream never retraces
+        row.update(rep.stream_flags())      # -> benchmark JSON / check_bench
+    """
+    report = Report()
+    uninstall = _install_compile_listener(report)
+    catcher = None
+    caught: list = []
+    if capture_donation_warnings:
+        catcher = warnings.catch_warnings(record=True)
+        caught = catcher.__enter__()
+        warnings.simplefilter("always")
+    with _lock:
+        _active.append(report)
+    try:
+        if transfer_guard is not None:
+            import jax
+
+            with jax.transfer_guard(transfer_guard):
+                yield report
+        else:
+            yield report
+    finally:
+        with _lock:
+            _active.remove(report)
+        uninstall()
+        if catcher is not None:
+            catcher.__exit__(None, None, None)
+            for w in caught:
+                msg = str(w.message)
+                if "donat" in msg.lower():
+                    report.donation_warnings.append(msg)
+                else:  # not ours: hand it back to the outer filters
+                    warnings.warn_explicit(w.message, w.category,
+                                           w.filename, w.lineno)

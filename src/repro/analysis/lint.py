@@ -1,0 +1,812 @@
+"""jaxlint — an AST linter for the repo's JAX/Pallas invariants.
+
+The correctness of the delayed-gradient executor and the serving stack
+rests on invariants no off-the-shelf linter knows about: staleness must
+come from the :class:`~repro.core.delay_model.DelayTrace`, not from a
+silent retrace; donated buffers must die at the call; every noise draw
+must consume a fresh key; scan bodies must stay on device; in-place Pallas
+kernels must tell XLA they alias.  Each rule below encodes one of those
+invariants as a syntactic pattern tight enough to run clean over the real
+tree (``scripts/jaxlint.py src benchmarks examples`` is a CI gate) while
+firing on the seeded violations in ``tests/fixtures/jaxlint``:
+
+========  ==============================================================
+JL001     retrace hazard: a Python-scalar argument (``int()``, ``len()``,
+          ``.shape[...]``) derived from a loop-varying value passed to a
+          jitted callable inside a loop — every iteration traces a new
+          program.
+JL002     use-after-donation: a buffer passed at a ``donate_argnums``
+          position of a jitted callable is read again afterwards in the
+          caller — the buffer was handed to XLA and may already be
+          overwritten.
+JL003     RNG key reuse: the same PRNG key is consumed by two
+          ``jax.random`` draws without an intervening ``split`` /
+          ``fold_in`` rebinding — the draws are silently identical.
+JL004     host sync in traced code: ``.item()`` / ``.tolist()`` /
+          ``np.asarray`` / scalar coercions / data-dependent ``if`` inside
+          a jitted function or a ``lax.scan``-family body — a device sync
+          (or tracer leak) on the hot path.
+JL005     in-place Pallas kernel without ``input_output_aliases``: a
+          ``pallas_call`` whose output mirrors an input's shape and dtype
+          updates that buffer in place; without the alias declaration XLA
+          double-buffers it through HBM.
+JL006     ``shard_map``/``NamedSharding`` spec references a mesh axis the
+          statically visible mesh does not define — shards silently
+          replicate (or the program fails only at scale).
+========  ==============================================================
+
+False positives are suppressed inline::
+
+    x = jitted(int(n))  # jaxlint: disable=JL001
+    # jaxlint: disable-file=JL003   (anywhere in the file, whole file)
+
+The linter is pure stdlib ``ast``  — no imports of the linted code — so it
+runs in the lint CI job without a JAX install.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Optional, Sequence
+
+__all__ = ["Finding", "RULES", "lint_source", "lint_file", "lint_paths"]
+
+RULES = {
+    "JL001": "retrace hazard: loop-varying Python scalar in a jitted call",
+    "JL002": "use-after-donation: donated buffer read after the call",
+    "JL003": "RNG key reuse: key consumed twice without split/fold_in",
+    "JL004": "host sync inside traced code",
+    "JL005": "in-place Pallas kernel missing input_output_aliases",
+    "JL006": "shard_map/sharding spec axis not in the mesh",
+}
+
+_PRAGMA = re.compile(r"#\s*jaxlint:\s*(disable(?:-file)?)\s*=\s*"
+                     r"([A-Za-z0-9_,\s]+)")
+
+#: jax.random.* callees that *consume* a key (first positional argument)
+_KEY_ROTATORS = {"split", "fold_in", "clone", "key_data", "wrap_key_data",
+                 "key_impl", "PRNGKey", "key"}
+#: scalar coercions that force a host sync when applied to a traced value
+_SCALAR_COERCIONS = {"int", "float", "bool", "complex"}
+#: (callee, body-argument positions) for the scan family
+_TRACED_BODY_POS = {
+    "jax.lax.scan": (0,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": None,  # every arg from 1 on is a branch
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+
+    def format(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}{tag}"
+
+
+# --------------------------------------------------------------------------
+# pragma collection
+# --------------------------------------------------------------------------
+
+def _pragmas(source: str):
+    """-> (per-line {lineno: set of rules}, file-wide set of rules).
+
+    ``# jaxlint: disable=JL001[,JL002]`` suppresses on its physical line;
+    ``# jaxlint: disable-file=JL001`` (or ``=all``) suppresses file-wide.
+    """
+    per_line: dict[int, set] = {}
+    file_wide: set = set()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _PRAGMA.search(tok.string)
+            if not m:
+                continue
+            rules = {r.strip().upper() for r in m.group(2).split(",")
+                     if r.strip()}
+            if "ALL" in rules:
+                rules = set(RULES)
+            if m.group(1) == "disable-file":
+                file_wide |= rules
+            else:
+                per_line.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenError:
+        pass
+    return per_line, file_wide
+
+
+# --------------------------------------------------------------------------
+# small AST helpers
+# --------------------------------------------------------------------------
+
+def _dotted(node: ast.AST, aliases: dict) -> Optional[str]:
+    """Resolve ``jr.normal`` / ``jax.random.normal`` / ``normal`` to a full
+    dotted path using the file's import aliases; None when not a name."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    parts.reverse()
+    head = aliases.get(parts[0], parts[0])
+    return ".".join([head] + parts[1:])
+
+
+def _import_aliases(tree: ast.Module) -> dict:
+    """{local name: dotted path} for every import in the module."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _names_in(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _assigned_names(node: ast.AST) -> set:
+    """Names bound anywhere under ``node`` (assign/aug/ann/for/with/walrus)."""
+    out: set = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            out.add(n.id)
+    return out
+
+
+def _call_name(call: ast.Call, aliases: dict) -> Optional[str]:
+    return _dotted(call.func, aliases)
+
+
+def _is_jit_expr(node: ast.AST, aliases: dict) -> bool:
+    """True for ``jax.jit``, ``jit``, ``partial(jax.jit, ...)``."""
+    path = _dotted(node, aliases)
+    if path in ("jax.jit", "jax.pmap"):
+        return True
+    if isinstance(node, ast.Call):
+        head = _dotted(node.func, aliases)
+        if head in ("functools.partial", "partial") and node.args:
+            return _is_jit_expr(node.args[0], aliases)
+        return _is_jit_expr(node.func, aliases)
+    return False
+
+
+def _const_int_tuple(node: ast.AST) -> Optional[tuple]:
+    """A constant int / tuple-of-ints expression, else None."""
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return None
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, int)
+                                              for v in val):
+        return tuple(val)
+    return None
+
+
+def _last_attr(node: ast.AST) -> Optional[str]:
+    """``self._run`` -> ``_run``; ``name`` -> ``name``."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+# --------------------------------------------------------------------------
+# the linter
+# --------------------------------------------------------------------------
+
+class _FileLinter:
+    def __init__(self, tree: ast.Module, source: str, path: str):
+        self.tree = tree
+        self.path = path
+        self.aliases = _import_aliases(tree)
+        self.findings: list[Finding] = []
+        self.per_line, self.file_wide = _pragmas(source)
+        # name -> donated positional indices, for jit-wrapped callables
+        self.donated: dict[str, tuple] = {}
+        # function defs considered traced (jitted / scan-family bodies)
+        self.traced_funcs: set = set()
+        self.jitted_names: set = set()
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        suppressed = (rule in self.file_wide
+                      or rule in self.per_line.get(line, ()))
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=line,
+            col=getattr(node, "col_offset", 0) + 1, message=message,
+            suppressed=suppressed))
+
+    # -- pass 1: collect jitted / donated / traced functions ----------------
+    def collect(self) -> None:
+        defs: dict[str, list] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+                for dec in node.decorator_list:
+                    if _is_jit_expr(dec, self.aliases):
+                        self.traced_funcs.add(node)
+                        self.jitted_names.add(node.name)
+                        donate = self._donate_argnums(dec)
+                        if donate:
+                            self.donated[node.name] = donate
+
+        def mark(name_node):
+            name = _last_attr(name_node)
+            for d in defs.get(name or "", ()):
+                self.traced_funcs.add(d)
+
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = _call_name(node, self.aliases)
+            if path in ("jax.jit", "jax.pmap") and node.args:
+                mark(node.args[0])
+                donate = self._donate_argnums(node)
+                target = self._assign_target(node)
+                if target:
+                    self.jitted_names.add(target)
+                    if donate:
+                        self.donated[target] = donate
+            elif path is not None and (path.endswith("shard_map")
+                                       or path.endswith("checkpoint")):
+                if node.args:
+                    mark(node.args[0])
+            elif path is not None:
+                tail = "jax.lax." + path.rsplit(".", 1)[-1]
+                if tail in _TRACED_BODY_POS and path.rsplit(".", 1)[-1] in (
+                        "scan", "while_loop", "fori_loop", "cond", "switch"):
+                    pos = _TRACED_BODY_POS[tail]
+                    idxs = (range(1, len(node.args)) if pos is None else pos)
+                    for i in idxs:
+                        if i < len(node.args):
+                            mark(node.args[i])
+        # nested defs inside a traced function are traced too
+        for fn in list(self.traced_funcs):
+            for sub in ast.walk(fn):
+                if (isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and sub is not fn):
+                    self.traced_funcs.add(sub)
+
+    def _donate_argnums(self, call: ast.AST) -> tuple:
+        if not isinstance(call, ast.Call):
+            return ()
+        for kw in call.keywords:
+            if kw.arg in ("donate_argnums", "donate_argnames"):
+                val = _const_int_tuple(kw.value)
+                return val or ()
+        return ()
+
+    def _assign_target(self, call: ast.Call) -> Optional[str]:
+        """The name (or trailing attribute) a ``x = jax.jit(...)`` binds."""
+        parent = getattr(call, "_jaxlint_parent", None)
+        if isinstance(parent, ast.Assign) and len(parent.targets) == 1:
+            return _last_attr(parent.targets[0])
+        return None
+
+    # -- driving -------------------------------------------------------------
+    def run(self) -> list[Finding]:
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._jaxlint_parent = node
+        self.collect()
+        self.check_jl001()
+        self.check_jl002()
+        self.check_jl003()
+        self.check_jl004()
+        self.check_jl005()
+        self.check_jl006()
+        deduped, seen = [], set()
+        for f in self.findings:
+            key = (f.rule, f.line, f.col, f.message)
+            if key not in seen:
+                seen.add(key)
+                deduped.append(f)
+        deduped.sort(key=lambda f: (f.line, f.col, f.rule))
+        self.findings = deduped
+        return self.findings
+
+    # -- JL001: retrace hazard ------------------------------------------------
+    def check_jl001(self) -> None:
+        for loop in ast.walk(self.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            varying = _assigned_names(loop)
+            if isinstance(loop, ast.For):
+                varying |= _names_in(loop.target)
+            for call in ast.walk(loop):
+                if not isinstance(call, ast.Call):
+                    continue
+                callee = _last_attr(call.func)
+                if callee not in self.jitted_names:
+                    continue
+                for arg in list(call.args) + [k.value for k in call.keywords]:
+                    if self._scalarish(arg, varying):
+                        self.emit(
+                            "JL001", call,
+                            f"jitted `{callee}` called in a loop with a "
+                            "loop-varying Python scalar argument — every "
+                            "distinct value compiles a new program; pass a "
+                            "device array or bucket the value")
+                        break
+
+    def _scalarish(self, node: ast.AST, varying: set) -> bool:
+        """A Python-scalar expression whose value changes across the loop:
+        int()/len()/... coercions, ``.shape`` accesses, or arithmetic on a
+        loop-varying name."""
+        if isinstance(node, ast.Call):
+            head = _dotted(node.func, self.aliases)
+            if head in (_SCALAR_COERCIONS | {"len", "round"}):
+                return bool(_names_in(node) & varying)
+        if isinstance(node, (ast.Subscript, ast.Attribute)):
+            src = ast.unparse(node)
+            if (".shape" in src or ".size" in src or ".ndim" in src):
+                return bool(_names_in(node) & varying)
+        if isinstance(node, ast.BinOp):
+            return (self._scalarish(node.left, varying)
+                    or self._scalarish(node.right, varying))
+        return False
+
+    # -- JL002: use-after-donation ---------------------------------------------
+    def check_jl002(self) -> None:
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stmts = self._flat_statements(fn)
+            for i, stmt in enumerate(stmts):
+                for call in self._own_calls(stmt):
+                    callee = _last_attr(call.func)
+                    donate = self.donated.get(callee or "")
+                    if not donate:
+                        continue
+                    for pos in donate:
+                        if pos >= len(call.args):
+                            continue
+                        arg = call.args[pos]
+                        if not isinstance(arg, ast.Name):
+                            continue
+                        self._flag_reads_after(stmts, i, stmt, arg.id,
+                                               callee)
+
+    def _own_calls(self, stmt) -> list:
+        """Calls belonging to ``stmt`` itself, not to statements nested in
+        its body (those appear later in the flattened list and would be
+        processed twice)."""
+        out = []
+
+        def visit(node):
+            for name, value in ast.iter_fields(node):
+                if isinstance(value, list) and value and isinstance(
+                        value[0], ast.stmt):
+                    continue  # a nested statement list: not ours
+                for sub in (value if isinstance(value, list) else [value]):
+                    if isinstance(sub, ast.AST):
+                        if isinstance(sub, ast.Call):
+                            out.append(sub)
+                        visit(sub)
+        visit(stmt)
+        return out
+
+    def _flat_statements(self, fn) -> list:
+        """The function's statements in source order (branch bodies
+        flattened; nested defs excluded — they are separate scopes)."""
+        out = []
+
+        def visit(body):
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                out.append(stmt)
+                for _, value in ast.iter_fields(stmt):
+                    if isinstance(value, list) and value and \
+                            isinstance(value[0], ast.stmt):
+                        visit(value)
+        visit(fn.body)
+        return out
+
+    def _flag_reads_after(self, stmts, idx, call_stmt, name, callee):
+        # the donating statement itself may rebind the name via its targets
+        if isinstance(call_stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (call_stmt.targets
+                       if isinstance(call_stmt, ast.Assign)
+                       else [call_stmt.target])
+            if any(name in _names_in(t) for t in targets):
+                return
+        for stmt in stmts[idx + 1:]:
+            # a store to the name kills the tracking...
+            for sub in ast.walk(stmt):
+                if (isinstance(sub, ast.Name) and sub.id == name
+                        and isinstance(sub.ctx, ast.Load)):
+                    self.emit(
+                        "JL002", sub,
+                        f"`{name}` was donated to `{callee}` "
+                        f"(donate_argnums) at line {call_stmt.lineno} and "
+                        "read again here — the buffer may already be "
+                        "overwritten; copy it before the call or stop "
+                        "donating")
+                    return
+            if name in _assigned_names(stmt):
+                return
+
+    # -- JL003: RNG key reuse ---------------------------------------------------
+    def check_jl003(self) -> None:
+        funcs = [n for n in ast.walk(self.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        scopes = funcs + [self.tree]
+        for scope in scopes:
+            self._check_key_reuse(scope)
+
+    def _check_key_reuse(self, scope) -> None:
+        # (lineno, kind, name): kind is 'draw' | 'rebind'
+        events: list = []
+        own_defs = {n for n in ast.walk(scope)
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and n is not scope}
+        nested = set()
+        for d in own_defs:
+            for sub in ast.walk(d):
+                nested.add(sub)
+        for node in ast.walk(scope):
+            if node in nested or node is scope and not isinstance(
+                    node, ast.Module):
+                pass
+            if node in nested:
+                continue
+            if isinstance(node, ast.Call):
+                path = _call_name(node, self.aliases) or ""
+                if path.startswith("jax.random."):
+                    fn = path.rsplit(".", 1)[-1]
+                    if fn in _KEY_ROTATORS or not node.args:
+                        continue
+                    key = node.args[0]
+                    if isinstance(key, ast.Name):
+                        events.append((node.lineno, "draw", key.id, node))
+            elif isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                           ast.Store):
+                events.append((node.lineno, "rebind", node.id, node))
+        events.sort(key=lambda e: e[0])
+        live_draw: dict[str, int] = {}
+        for lineno, kind, name, node in events:
+            if kind == "rebind":
+                live_draw.pop(name, None)
+            elif name in live_draw:
+                self.emit(
+                    "JL003", node,
+                    f"key `{name}` already consumed by a jax.random draw at "
+                    f"line {live_draw[name]} — the two draws are identical; "
+                    "split or fold_in between them")
+            else:
+                live_draw[name] = lineno
+
+    # -- JL004: host sync in traced code -----------------------------------------
+    def check_jl004(self) -> None:
+        seen: set = set()
+        for fn in self.traced_funcs:
+            scan_params = self._scan_body_params(fn)
+            for node in ast.walk(fn):
+                if id(node) in seen:
+                    continue
+                if isinstance(node, ast.Call):
+                    msg = self._host_sync_call(node)
+                    if msg:
+                        seen.add(id(node))
+                        self.emit("JL004", node, msg)
+                elif isinstance(node, (ast.If, ast.While)) and scan_params:
+                    if _names_in(node.test) & scan_params:
+                        seen.add(id(node))
+                        self.emit(
+                            "JL004", node,
+                            "`if`/`while` on a value derived from the "
+                            "traced body's arguments — Python control flow "
+                            "cannot branch on a tracer; use lax.cond / "
+                            "jnp.where")
+
+    def _scan_body_params(self, fn) -> set:
+        """Params of a scan-family body function, plus names unpacked from
+        them at the top of the body (the carry tuple)."""
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return set()
+        # only scan bodies get the data-dependent-`if` check: jit functions
+        # routinely branch on static (non-array) arguments
+        if not self._is_scan_body(fn):
+            return set()
+        params = {a.arg for a in fn.args.args} - {"self"}
+        for stmt in fn.body:
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.value, ast.Name)
+                    and stmt.value.id in params):
+                params |= _names_in(stmt.targets[0])
+        return params
+
+    def _is_scan_body(self, fn) -> bool:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = _call_name(node, self.aliases) or ""
+            leaf = path.rsplit(".", 1)[-1]
+            if leaf not in ("scan", "while_loop", "fori_loop", "cond",
+                            "switch"):
+                continue
+            for arg in node.args:
+                if _last_attr(arg) == fn.name:
+                    return True
+        return False
+
+    def _host_sync_call(self, call: ast.Call) -> Optional[str]:
+        if isinstance(call.func, ast.Attribute) and call.func.attr in (
+                "item", "tolist", "__array__"):
+            return (f"`.{call.func.attr}()` inside traced code forces a "
+                    "device->host sync (or fails on a tracer); keep the "
+                    "value on device")
+        path = _dotted(call.func, self.aliases) or ""
+        head = path.split(".", 1)[0]
+        if head in ("numpy", "np") and path.rsplit(".", 1)[-1] in (
+                "asarray", "array", "copy"):
+            if call.args and not isinstance(call.args[0], ast.Constant):
+                return (f"`{path.rsplit('.', 1)[-1]}` from numpy inside "
+                        "traced code materializes on host — use jnp, or "
+                        "move this to the host driver")
+        if path in _SCALAR_COERCIONS and call.args:
+            arg = call.args[0]
+            src = ast.unparse(arg)
+            static_shape = (".shape" in src or ".ndim" in src
+                            or "len(" in src or isinstance(arg, ast.Constant))
+            if not static_shape:
+                return (f"`{path}()` on a traced value forces a host sync "
+                        "(ConcretizationTypeError under jit); keep it as an "
+                        "array or mark the argument static")
+        return None
+
+    # -- JL005: pallas in-place without aliases -----------------------------------
+    def check_jl005(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = _call_name(node, self.aliases) or ""
+            if path.rsplit(".", 1)[-1] != "pallas_call":
+                continue
+            if any(kw.arg == "input_output_aliases" for kw in node.keywords):
+                continue
+            out_shape = next((kw.value for kw in node.keywords
+                              if kw.arg == "out_shape"), None)
+            if out_shape is None:
+                continue
+            operands = self._pallas_operands(node)
+            shape_unpacks = self._shape_unpacks(node)
+            entries = (out_shape.elts if isinstance(
+                out_shape, (ast.List, ast.Tuple)) else [out_shape])
+            for entry in entries:
+                src_name = self._mirrored_input(entry, operands,
+                                                shape_unpacks)
+                if src_name:
+                    self.emit(
+                        "JL005", node,
+                        f"pallas_call output mirrors input `{src_name}` "
+                        "(same shape and dtype) — an in-place update must "
+                        "declare input_output_aliases so XLA reuses the "
+                        "buffer instead of double-buffering it through HBM")
+                    return
+
+    def _pallas_operands(self, call: ast.Call) -> set:
+        """Names passed to the callable ``pallas_call(...)(...)`` returns,
+        or (fallback) the enclosing function's parameters."""
+        parent = getattr(call, "_jaxlint_parent", None)
+        if isinstance(parent, ast.Call) and parent.func is call:
+            return {a.id for a in parent.args if isinstance(a, ast.Name)}
+        node = call
+        while node is not None and not isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            node = getattr(node, "_jaxlint_parent", None)
+        if node is not None:
+            return {a.arg for a in node.args.args} - {"self"}
+        return set()
+
+    def _shape_unpacks(self, call: ast.Call) -> dict:
+        """{(name_i, name_j, ...): source} for ``a, b = x.shape`` unpacks in
+        the enclosing function."""
+        node = call
+        while node is not None and not isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            node = getattr(node, "_jaxlint_parent", None)
+        out: dict = {}
+        if node is None:
+            return out
+        for stmt in ast.walk(node):
+            if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1):
+                continue
+            tgt, val = stmt.targets[0], stmt.value
+            if (isinstance(val, ast.Attribute) and val.attr == "shape"
+                    and isinstance(val.value, ast.Name)
+                    and isinstance(tgt, ast.Tuple)
+                    and all(isinstance(e, ast.Name) for e in tgt.elts)):
+                out[tuple(e.id for e in tgt.elts)] = val.value.id
+        return out
+
+    def _mirrored_input(self, entry: ast.AST, operands: set,
+                        shape_unpacks: dict) -> Optional[str]:
+        """The operand name whose full shape+dtype ``entry``
+        (a ShapeDtypeStruct(...) expression) mirrors, else None."""
+        if not (isinstance(entry, ast.Call) and entry.args
+                and len(entry.args) >= 2):
+            return None
+        if (_call_name(entry, self.aliases) or "").rsplit(
+                ".", 1)[-1] != "ShapeDtypeStruct":
+            return None
+        shape_arg, dtype_arg = entry.args[0], entry.args[1]
+        if not (isinstance(dtype_arg, ast.Attribute)
+                and dtype_arg.attr == "dtype"
+                and isinstance(dtype_arg.value, ast.Name)):
+            return None
+        name = dtype_arg.value.id
+        if name not in operands:
+            return None
+        # shape is literally `name.shape`
+        if (isinstance(shape_arg, ast.Attribute)
+                and shape_arg.attr == "shape"
+                and isinstance(shape_arg.value, ast.Name)
+                and shape_arg.value.id == name):
+            return name
+        # ... or the full tuple unpacked from `name.shape`, in order
+        if isinstance(shape_arg, ast.Tuple) and all(
+                isinstance(e, ast.Name) for e in shape_arg.elts):
+            elts = tuple(e.id for e in shape_arg.elts)
+            if shape_unpacks.get(elts) == name:
+                return name
+        return None
+
+    # -- JL006: spec axis not in mesh ----------------------------------------------
+    def check_jl006(self) -> None:
+        meshes = self._static_meshes()
+        if not meshes:
+            return
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = _call_name(node, self.aliases) or ""
+            leaf = path.rsplit(".", 1)[-1]
+            if leaf == "shard_map":
+                mesh_kw = next((kw.value for kw in node.keywords
+                                if kw.arg == "mesh"), None)
+                mesh_name = (mesh_kw.id if isinstance(mesh_kw, ast.Name)
+                             else None)
+                spec_nodes = [kw.value for kw in node.keywords
+                              if kw.arg in ("in_specs", "out_specs")]
+            elif leaf == "NamedSharding":
+                mesh_name = (node.args[0].id if node.args
+                             and isinstance(node.args[0], ast.Name)
+                             else None)
+                spec_nodes = node.args[1:2]
+            else:
+                continue
+            axes = meshes.get(mesh_name or "")
+            if axes is None:
+                continue
+            for spec in spec_nodes:
+                for used in self._spec_axes(spec):
+                    if used not in axes:
+                        self.emit(
+                            "JL006", node,
+                            f"partition spec names axis {used!r} but mesh "
+                            f"`{mesh_name}` only defines {sorted(axes)} — "
+                            "the dimension silently replicates (or fails "
+                            "only at scale)")
+
+    def _static_meshes(self) -> dict:
+        """{name: set of axis names} for meshes built with literal axis
+        tuples anywhere in the file."""
+        out: dict = {}
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            call = node.value
+            path = _call_name(call, self.aliases) or ""
+            leaf = path.rsplit(".", 1)[-1]
+            if leaf not in ("make_mesh", "Mesh"):
+                continue
+            axis_arg = None
+            if leaf == "make_mesh" and len(call.args) >= 2:
+                axis_arg = call.args[1]
+            elif leaf == "Mesh" and len(call.args) >= 2:
+                axis_arg = call.args[1]
+            for kw in call.keywords:
+                if kw.arg == "axis_names":
+                    axis_arg = kw.value
+            if axis_arg is None:
+                continue
+            try:
+                axes = ast.literal_eval(axis_arg)
+            except (ValueError, SyntaxError):
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            if isinstance(axes, (tuple, list)) and all(
+                    isinstance(a, str) for a in axes):
+                out[node.targets[0].id] = set(axes)
+        return out
+
+    def _spec_axes(self, spec: ast.AST) -> set:
+        """Axis-name string literals inside P(...) constructors under
+        ``spec``."""
+        axes: set = set()
+        for node in ast.walk(spec):
+            if not isinstance(node, ast.Call):
+                continue
+            path = _call_name(node, self.aliases) or ""
+            leaf = path.rsplit(".", 1)[-1]
+            if leaf not in ("P", "PartitionSpec"):
+                continue
+            for arg in node.args:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Constant) and isinstance(
+                            sub.value, str):
+                        axes.add(sub.value)
+        return axes
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint one source string; returns every finding (``suppressed`` marks
+    pragma-silenced ones)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="JL000", path=path, line=e.lineno or 1,
+                        col=(e.offset or 0) + 1,
+                        message=f"syntax error: {e.msg}")]
+    return _FileLinter(tree, source, path).run()
+
+
+def lint_file(path) -> list[Finding]:
+    p = Path(path)
+    return lint_source(p.read_text(), str(p))
+
+
+def lint_paths(paths: Sequence, *,
+               exclude: Iterable[str] = ()) -> list[Finding]:
+    """Lint every ``*.py`` under ``paths`` (files or directories)."""
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    exclude = tuple(exclude)
+    findings: list[Finding] = []
+    for f in files:
+        if any(part in exclude for part in f.parts):
+            continue
+        findings.extend(lint_file(f))
+    return findings

@@ -62,7 +62,7 @@ def restore_checkpoint(path: str, like: PyTree) -> PyTree:
 
     leaves_with_paths = []
 
-    def visit(kp, leaf):
+    def visit(kp, _leaf):
         p = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
         leaves_with_paths.append(p)
 

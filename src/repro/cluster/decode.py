@@ -42,7 +42,7 @@ system):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
@@ -51,6 +51,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.instrument import counters as _counters
 from repro.models.common import partition_tree
 from repro.models.predictive import bma_logits
 from repro.samplers.base import SamplerState
@@ -94,8 +95,6 @@ class DecodeEngine:
     fused_interpret: Optional[bool] = None  # default: compiled only on TPU
     return_logits: bool = False
 
-    num_traces: int = field(default=0, init=False)  # one per (rung, n) triple
-
     def __post_init__(self):
         from repro.cluster.serve import HostScratch
         from repro.models.transformer import Model
@@ -113,7 +112,8 @@ class DecodeEngine:
             self.buckets = sorted(int(b) for b in self.buckets)
         if self.prompt_buckets is not None:
             self.prompt_buckets = sorted(int(b) for b in self.prompt_buckets)
-        self._scratch = HostScratch()
+        self._counters = _counters("DecodeEngine")
+        self._scratch = HostScratch(self._counters)
         self._cache: dict = {}  # B rung -> persistent KV-cache bank
         if self.mesh is not None:
             n_shards = self.mesh.shape[self.chain_axis]
@@ -146,7 +146,8 @@ class DecodeEngine:
     # -- the traced program ---------------------------------------------------
     def _core(self, max_new: int, greedy: bool, params, cache, tokens,
               prompt_len, key):
-        self.num_traces += 1  # python side effect: counts traces
+        # python side effect: runs once per (rung, max_new) trace
+        self._counters.trace("decode")
         if self.mesh is None:
             return self._stream(params, cache, tokens, prompt_len, key,
                                 max_new, greedy, reduce=bma_logits)
@@ -270,10 +271,18 @@ class DecodeEngine:
     __call__ = generate
 
     @property
+    def num_traces(self) -> int:
+        """Jit traces so far (one per (B rung, T rung, max_new) triple) —
+        a thin view over the engine's :mod:`repro.analysis.instrument`
+        counters."""
+        return self._counters.traces
+
+    @property
     def num_host_pad_allocs(self) -> int:
         """Prompt scratch-buffer creations — one per rung pair, never one
-        per request (asserted by ``bench_decode``)."""
-        return self._scratch.allocs
+        per request (asserted by ``bench_decode``).  A thin view over the
+        engine's :mod:`repro.analysis.instrument` counters."""
+        return self._counters.pad_allocs
 
     # -- constructors ---------------------------------------------------------
     @classmethod

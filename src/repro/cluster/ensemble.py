@@ -233,7 +233,7 @@ def diagnostics_recorder(*, every: int = 1, window: int = 64) -> Callable:
             "n_draws": int(draws.shape[1]),
         })
 
-    def hook(step_end: int, state: SamplerState, aux) -> None:
+    def hook(step_end: int, state: SamplerState, _aux) -> None:
         if step_end - last[0] < every:
             return
         last[0] = step_end

@@ -29,7 +29,7 @@ the pre-heterogeneous executor.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.instrument import counters as _counters
 from repro.cluster.ensemble import ensemble_step, init_ensemble
 from repro.cluster.schedule import (
     WorkerSchedule,
@@ -108,9 +109,8 @@ class ClusterEngine:
     buckets: Optional[Sequence[int]] = None
     worker_rng: bool = False
 
-    num_traces: int = field(default=0, init=False)  # jit retrace counter
-
     def __post_init__(self):
+        self._counters = _counters("ClusterEngine")
         if self.chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
         if self.num_chains < 1:
@@ -136,6 +136,12 @@ class ClusterEngine:
         self._make_batches = (jax.jit(jax.vmap(jax.vmap(self.batch_fn)))
                               if self.batch_fn is not None else None)
 
+    @property
+    def num_traces(self) -> int:
+        """Jit traces so far (one per chunk layout / bucket rung) — a thin
+        view over the engine's :mod:`repro.analysis.instrument` counters."""
+        return self._counters.traces
+
     def _step_fn(self, batch_axis: Optional[int]):
         return ensemble_step(self.sampler, batch_axis=batch_axis,
                              worker_rng=self.worker_rng)
@@ -150,7 +156,8 @@ class ClusterEngine:
         the chain axis, ``None`` broadcasts one batch to every chain."""
 
         def chunk(state, batches, extra):
-            self.num_traces += 1  # python side effect: counts traces
+            # python side effect: runs once per trace, never per call
+            self._counters.trace(f"chunk[batch_axis={batch_axis}]")
             step_fn = self._step_fn(batch_axis)
 
             def body(s, inp):
@@ -178,7 +185,8 @@ class ClusterEngine:
         length so offsets never index out of bounds."""
 
         def chunk(state, data, extra):
-            self.num_traces += 1  # python side effect: counts traces
+            # python side effect: runs once per trace, never per call
+            self._counters.trace(f"masked_chunk[pad={pad}]")
             step_fn = self._step_fn(0)
             n_data = jax.tree_util.tree_leaves(data)[0].shape[0]
 

@@ -28,7 +28,7 @@ buffer — created fresh per request — is donated to the jitted call.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.instrument import Counters as _Counters, counters as _counters
 from repro.samplers.base import SamplerState
 from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
 
@@ -96,11 +97,17 @@ class HostScratch:
     growing once every rung has been seen — asserted by the serve/decode
     benches).  Reuse is safe because ``jit`` copies host arrays to device
     synchronously at dispatch.
+
+    Every buffer creation is reported to ``counters``
+    (a :class:`repro.analysis.instrument.Counters` handle) when one is
+    given, so an :func:`~repro.analysis.instrument.instrument` region around
+    a warm request stream sees zero pad-alloc events.
     """
 
-    def __init__(self):
+    def __init__(self, counters: Optional[_Counters] = None):
         self._bufs: dict = {}
         self.allocs = 0  # scratch-buffer creations, NOT per-request work
+        self._counters = counters
 
     def get(self, key, shape, dtype) -> np.ndarray:
         """The scratch buffer for ``key`` (caller fills it)."""
@@ -110,6 +117,8 @@ class HostScratch:
             buf = np.empty(shape, dtype)
             self._bufs[k] = buf
             self.allocs += 1
+            if self._counters is not None:
+                self._counters.pad_alloc()
         return buf
 
     def pad(self, x: np.ndarray, n: int, key=0) -> np.ndarray:
@@ -179,14 +188,13 @@ class ServeEngine:
     chain_axis: str = "data"
     donate: bool = True
 
-    num_traces: int = field(default=0, init=False)  # one per shape bucket
-
     def __post_init__(self):
         leaves = jax.tree_util.tree_leaves(self.params)
         if not leaves:
             raise ValueError("params bank is empty")
         self.num_chains = int(leaves[0].shape[0])
-        self._host_scratch = HostScratch()
+        self._counters = _counters("ServeEngine")
+        self._host_scratch = HostScratch(self._counters)
         if self.buckets is not None:
             self.buckets = sorted(int(b) for b in self.buckets)
         self._qs = jnp.asarray(self.quantiles, jnp.float32)
@@ -206,7 +214,8 @@ class ServeEngine:
         forward = jax.vmap(self.predict_fn, in_axes=(0, None))
 
         def stats(params, queries):
-            self.num_traces += 1  # python side effect: counts traces
+            # python side effect: runs once per trace, never per call
+            self._counters.trace("stats")
             return predictive_stats(forward(params, queries), self._qs)
 
         if self.mesh is None:
@@ -214,7 +223,7 @@ class ServeEngine:
         ax = self.chain_axis
 
         def sharded_stats(params, queries):
-            self.num_traces += 1
+            self._counters.trace("sharded_stats")
 
             def body(p, q):
                 local = forward(p, q)  # (C/shards, Q, ...)
@@ -228,11 +237,18 @@ class ServeEngine:
         return sharded_stats
 
     @property
+    def num_traces(self) -> int:
+        """Jit traces so far (one per shape bucket) — a thin view over the
+        engine's :mod:`repro.analysis.instrument` counters."""
+        return self._counters.traces
+
+    @property
     def num_host_pad_allocs(self) -> int:
         """Host scratch-buffer creations so far — one per (bucket rung,
         query leaf), NOT one per request; the serve bench asserts this stops
-        growing once the stream's rungs have all been seen."""
-        return self._host_scratch.allocs
+        growing once the stream's rungs have all been seen.  A thin view
+        over the engine's :mod:`repro.analysis.instrument` counters."""
+        return self._counters.pad_allocs
 
     # -- streaming ------------------------------------------------------------
     def decoder(self, model, **kw) -> "Any":

@@ -92,7 +92,7 @@ class SGLDSampler:
         return self._sampler.run(state, batches, delays, collect=collect)
 
 
-def make_minibatch_grad(potential, batch_size: int):
+def make_minibatch_grad(potential):
     """grad U from a potential object (autodiff through potential.value)."""
 
     def grad_fn(params, batch):

@@ -77,7 +77,7 @@ def decode_step_2d(q, k_new, v_new, k_cache, v_cache, valid, slot,
             pl.BlockSpec((1, KV, hd), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, smax, KV, hd), lambda i: (i, 0, 0, 0)),
             pl.BlockSpec((1, smax, KV, hd), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((smax,), lambda i: (0,)),
+            pl.BlockSpec((smax,), lambda _i: (0,)),
             pl.BlockSpec(memory_space=pl.ANY),  # slot scalar
         ],
         out_specs=[

@@ -59,6 +59,9 @@ def langevin_update_2d(x, g, seed: jnp.ndarray, gamma, scale, *, interpret=True)
         ],
         out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, L), x.dtype),
+        # the update overwrites x block-for-block: alias it so XLA reuses
+        # the buffer instead of double-buffering R*L fp32 through HBM
+        input_output_aliases={0: 0},
         interpret=interpret,
     )(x, g, seed, jnp.asarray(gamma, jnp.float32).reshape(1),
       jnp.asarray(scale, jnp.float32).reshape(1))

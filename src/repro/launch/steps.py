@@ -124,7 +124,7 @@ def batch_specs(cfg, shape, mesh, batch_axes, kind=None):
     specs = make_specs(cfg, shape, kind)
     b = P(batch_axes) if batch_axes else P(None)
 
-    def shard_of(path_leaf_name, leaf):
+    def shard_of(_path_leaf_name, leaf):
         if leaf.ndim == 0:
             return NamedSharding(mesh, P())
         return NamedSharding(mesh, P(*( (batch_axes if batch_axes else None),

@@ -18,13 +18,14 @@ Replaces the three hand-rolled per-step Python loops (``train/loop.py``,
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.instrument import counters as _counters
 from repro.samplers.base import Sampler, SamplerState
 
 PyTree = Any
@@ -42,7 +43,7 @@ def log_hook(every: int = 10, log_fn: Callable[[str], None] = print,
     t0 = time.time()
     last = [-every]
 
-    def hook(step_end: int, state: SamplerState, aux) -> None:
+    def hook(step_end: int, _state: SamplerState, aux) -> None:
         if aux is None or step_end - last[0] < every:
             return
         if isinstance(aux, dict) and key not in aux:
@@ -70,7 +71,7 @@ def checkpoint_hook(path: str, every: int = 100) -> Hook:
 
     last = [0]
 
-    def hook(step_end: int, state: SamplerState, aux) -> None:
+    def hook(step_end: int, state: SamplerState, _aux) -> None:
         if step_end - last[0] < every:
             return
         last[0] = step_end
@@ -190,9 +191,8 @@ class Engine:
     donate: bool = True
     collect_aux: bool = True
 
-    num_traces: int = field(default=0, init=False)  # jit retrace counter
-
     def __post_init__(self):
+        self._counters = _counters("Engine")
         if self.chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
         donate = (0,) if self.donate else ()
@@ -200,9 +200,16 @@ class Engine:
         self._make_batches = (jax.jit(jax.vmap(self.batch_fn))
                               if self.batch_fn is not None else None)
 
+    @property
+    def num_traces(self) -> int:
+        """Jit traces so far (one per distinct chunk length) — a thin view
+        over the engine's :mod:`repro.analysis.instrument` counters."""
+        return self._counters.traces
+
     # -- jitted chunk ---------------------------------------------------------
     def _chunk_body(self, state: SamplerState, batches, delays):
-        self.num_traces += 1  # python side effect: counts traces, not calls
+        # python side effect: runs once per trace, never per call
+        self._counters.trace("chunk")
 
         def body(s, inp):
             batch, d = inp

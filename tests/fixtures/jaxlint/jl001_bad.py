@@ -1,0 +1,17 @@
+"""Seeded JL001 violation: a jitted function fed a loop-varying Python
+scalar — every distinct value compiles a new XLA program."""
+
+import jax
+
+
+@jax.jit
+def step(x, n):
+    return x * n
+
+
+def run(batches):
+    out = []
+    for batch in batches:
+        # the unpadded length changes per batch -> one trace per length
+        out.append(step(batch, int(batch.shape[0])))
+    return out

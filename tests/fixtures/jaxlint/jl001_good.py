@@ -1,0 +1,21 @@
+"""JL001 clean variant: the loop passes device arrays padded to a fixed
+bucket, so every iteration reuses one compiled program."""
+
+import jax
+import jax.numpy as jnp
+
+BUCKET = 64
+
+
+@jax.jit
+def step(x, n):
+    return x * n
+
+
+def run(batches):
+    out = []
+    for batch in batches:
+        padded = jnp.zeros((BUCKET,), batch.dtype).at[:batch.shape[0]].set(
+            batch)
+        out.append(step(padded, jnp.asarray(batch.shape[0])))
+    return out

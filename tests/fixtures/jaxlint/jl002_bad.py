@@ -1,0 +1,18 @@
+"""Seeded JL002 violation: a buffer handed to XLA under donate_argnums is
+read again in the caller after the call."""
+
+import jax
+
+
+def _update(state, grad):
+    return state - 0.1 * grad
+
+
+update = jax.jit(_update, donate_argnums=(0,))
+
+
+def run(state, grad):
+    new_state = update(state, grad)
+    # `state` was donated: its buffer may already hold `new_state`
+    drift = state - new_state
+    return new_state, drift

@@ -1,0 +1,17 @@
+"""JL002 clean variant: the donated name is rebound by the call itself, so
+nothing reads the dead buffer."""
+
+import jax
+
+
+def _update(state, grad):
+    return state - 0.1 * grad
+
+
+update = jax.jit(_update, donate_argnums=(0,))
+
+
+def run(state, grad, steps):
+    for _ in range(steps):
+        state = update(state, grad)
+    return state

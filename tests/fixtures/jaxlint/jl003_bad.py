@@ -1,0 +1,10 @@
+"""Seeded JL003 violation: one PRNG key consumed by two draws — the noise
+and the init are silently identical streams."""
+
+import jax
+
+
+def sample(key, shape):
+    noise = jax.random.normal(key, shape)
+    init = jax.random.uniform(key, shape)
+    return noise, init

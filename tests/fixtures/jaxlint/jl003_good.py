@@ -1,0 +1,16 @@
+"""JL003 clean variant: the key is split (or folded) before every draw, the
+repo's standard idiom."""
+
+import jax
+
+
+def sample(key, shape):
+    k_noise, k_init = jax.random.split(key)
+    noise = jax.random.normal(k_noise, shape)
+    init = jax.random.uniform(k_init, shape)
+    return noise, init
+
+
+def per_step(key, step, shape):
+    key = jax.random.fold_in(key, step)
+    return jax.random.normal(key, shape)

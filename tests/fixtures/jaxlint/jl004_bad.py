@@ -1,0 +1,21 @@
+"""Seeded JL004 violations: host syncs and Python control flow inside
+traced code — a jitted loss and a lax.scan body."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def loss(params, batch):
+    err = params - batch
+    return float(err.sum())
+
+
+def trajectory(xs):
+    def body(carry, inp):
+        if inp > 0:
+            carry = carry + inp
+        host = np.asarray(carry)
+        return carry, host
+
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,25 @@
+"""JL004 clean variant: values stay on device; data-dependent branches go
+through jnp.where, and the host conversion happens in the host driver."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def loss(params, batch):
+    err = params - batch
+    return err.sum()
+
+
+def trajectory(xs):
+    def body(carry, inp):
+        carry = jnp.where(inp > 0, carry + inp, carry)
+        return carry, carry
+
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def host_driver(params, batch):
+    val = loss(params, batch)
+    return float(np.asarray(val))

@@ -1,0 +1,24 @@
+"""Seeded JL005 violation: an in-place Pallas update whose output mirrors
+the input, without input_output_aliases — XLA double-buffers through HBM."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double(x):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def scaled(x, g):
+    rows, lanes = x.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), x.dtype),
+    )(x)

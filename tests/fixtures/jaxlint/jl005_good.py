@@ -1,0 +1,30 @@
+"""JL005 clean variants: the in-place update declares the alias; a
+shape-changing kernel (reduction) needs none."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def _reduce_kernel(h_ref, o_ref):
+    o_ref[...] = h_ref[...].sum(axis=0)
+
+
+def double(x):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={0: 0},
+    )(x)
+
+
+def collapse(history):
+    depth, n = history.shape
+    return pl.pallas_call(
+        _reduce_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+    )(history)

@@ -1,0 +1,15 @@
+"""Seeded JL006 violation: the partition spec names an axis the mesh never
+defined — the dimension silently replicates."""
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+mesh = jax.make_mesh((8,), ("data",))
+bank_sharding = NamedSharding(mesh, P("model"))
+
+
+def shard_stats(fn, bank):
+    mapped = shard_map(fn, mesh=mesh, in_specs=(P("chains"),),
+                       out_specs=P("chains"))
+    return mapped(bank)

@@ -1,0 +1,14 @@
+"""JL006 clean variant: every spec axis exists in the mesh."""
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+mesh = jax.make_mesh((8,), ("data",))
+bank_sharding = NamedSharding(mesh, P("data"))
+
+
+def shard_stats(fn, bank):
+    mapped = shard_map(fn, mesh=mesh, in_specs=(P("data"),),
+                       out_specs=P("data"))
+    return mapped(bank)

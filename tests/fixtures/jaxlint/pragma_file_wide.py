@@ -1,0 +1,11 @@
+# jaxlint: disable-file=JL003
+"""File-wide pragma fixture: JL003 is disabled for the whole file, while
+other rules stay live."""
+
+import jax
+
+
+def sample(key, shape):
+    noise = jax.random.normal(key, shape)
+    init = jax.random.uniform(key, shape)
+    return noise, init

@@ -1,0 +1,15 @@
+"""Pragma fixture: every seeded violation here is silenced inline — the
+linter must record the findings as suppressed, never as active."""
+
+import jax
+
+
+def sample(key, shape):
+    noise = jax.random.normal(key, shape)
+    init = jax.random.uniform(key, shape)  # jaxlint: disable=JL003
+    return noise, init
+
+
+@jax.jit
+def loss(err):
+    return float(err.sum())  # jaxlint: disable=JL004

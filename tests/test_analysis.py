@@ -1,0 +1,211 @@
+"""repro.analysis: the jaxlint rules each fire on their seeded fixture and
+stay silent on the clean variant and on the real tree; pragmas suppress;
+the instrument bus reports exact per-engine trace/pad-alloc counts for a
+mixed serve+decode stream (the program-structure invariant the benchmark
+gates pin)."""
+
+import json
+import os
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import counters, instrument
+from repro.analysis.lint import RULES, lint_file, lint_paths, lint_source
+from repro.cluster import DecodeEngine, ServeEngine, bucket_size
+from repro.configs import get_reduced
+from repro.core import PolyRegression
+from repro.models import regression_predict
+from repro.models.transformer import Model, init_params
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "jaxlint"
+
+
+# -- linter: seeded fixtures ------------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_rule_fires_on_seeded_violation(rule):
+    findings = lint_file(FIXTURES / f"{rule.lower()}_bad.py")
+    active = [f for f in findings if f.rule == rule and not f.suppressed]
+    assert active, (f"{rule} did not fire on its seeded fixture; "
+                    f"got {[f.format() for f in findings]}")
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_rule_silent_on_clean_variant(rule):
+    findings = lint_file(FIXTURES / f"{rule.lower()}_good.py")
+    hits = [f.format() for f in findings if f.rule == rule]
+    assert not hits, f"{rule} false positive on its clean fixture: {hits}"
+
+
+def test_inline_pragma_suppresses_but_records():
+    findings = lint_file(FIXTURES / "pragma_suppressed.py")
+    assert findings, "the pragma fixture's seeded violations went undetected"
+    assert all(f.suppressed for f in findings), \
+        [f.format() for f in findings if not f.suppressed]
+    assert {f.rule for f in findings} == {"JL003", "JL004"}
+
+
+def test_file_wide_pragma():
+    findings = lint_file(FIXTURES / "pragma_file_wide.py")
+    jl003 = [f for f in findings if f.rule == "JL003"]
+    assert jl003 and all(f.suppressed for f in jl003)
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    findings = lint_file(bad)
+    assert [f.rule for f in findings] == ["JL000"]
+
+
+def test_real_tree_is_clean():
+    """The CI gate: src/benchmarks/examples carry no active findings."""
+    findings = [f for f in lint_paths([REPO / "src", REPO / "benchmarks",
+                                       REPO / "examples"])
+                if not f.suppressed]
+    assert not findings, "\n".join(f.format() for f in findings)
+
+
+def test_import_alias_resolution():
+    src = (
+        "import jax.random as jr\n"
+        "def sample(key, shape):\n"
+        "    a = jr.normal(key, shape)\n"
+        "    b = jr.uniform(key, shape)\n"
+        "    return a + b\n"
+    )
+    assert [f.rule for f in lint_source(src)] == ["JL003"]
+
+
+def test_cli_baseline_json():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "jaxlint.py"), "--baseline",
+         str(FIXTURES)],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert proc.returncode == 0, proc.stderr
+    report = json.loads(proc.stdout)
+    assert set(report) == {"rules", "findings", "counts"}
+    assert report["counts"]["active"] > 0  # the seeded violations
+    assert report["counts"]["suppressed"] >= 3  # the pragma fixtures
+    rules_hit = {f["rule"] for f in report["findings"]}
+    assert set(RULES) <= rules_hit
+
+
+def test_cli_exits_nonzero_on_findings():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "jaxlint.py"),
+         str(FIXTURES / "jl003_bad.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 1
+    assert "JL003" in proc.stdout
+
+
+# -- instrument: the event bus ------------------------------------------------
+
+def test_counters_broadcast_and_nesting():
+    c = counters("X")
+    with instrument() as outer:
+        c.trace("f")
+        with instrument() as inner:
+            c.trace("f")
+            c.pad_alloc()
+    c.trace("g")  # outside both regions: handle counts it, reports don't
+    assert (c.traces, c.pad_allocs) == (3, 1)
+    assert c.per_fn == {"f": 2, "g": 1}
+    assert outer.num_traces == 2 and inner.num_traces == 1
+    assert outer.traces == {("X", "f"): 2}
+    assert inner.pad_allocs == {"X": 1} and outer.num_pad_allocs == 1
+    assert inner.stream_flags() == {"retraced_in_stream": True,
+                                    "pad_allocs_in_stream": 1}
+    empty = instrument()
+    with empty as rep:
+        pass
+    assert rep.stream_flags() == {"retraced_in_stream": False,
+                                  "pad_allocs_in_stream": 0}
+
+
+def test_report_to_dict_is_json_ready():
+    c = counters("Eng")
+    with instrument() as rep:
+        c.trace("stats")
+        c.pad_alloc()
+    d = json.loads(json.dumps(rep.to_dict()))
+    assert d["traces"] == {"Eng/stats": 1}
+    assert d["pad_allocs"] == {"Eng": 1}
+    assert set(d) == {"traces", "pad_allocs", "xla_compiles",
+                      "donation_warnings"}
+
+
+def test_donation_warnings_captured_others_reemitted():
+    with pytest.warns(UserWarning, match="unrelated"):
+        with instrument() as rep:
+            warnings.warn("Some donated buffers were not usable: f32[3]")
+            warnings.warn("unrelated warning", UserWarning)
+    assert len(rep.donation_warnings) == 1
+    assert "donated" in rep.donation_warnings[0]
+
+
+def test_transfer_guard_gives_jl004_teeth():
+    import jax.numpy as jnp
+
+    x = jnp.arange(4.0)
+    with pytest.raises(Exception, match="[Dd]isallowed.*transfer"):
+        with instrument(transfer_guard="disallow"):
+            x[0].item()  # the index is an implicit host->device transfer
+
+
+def test_mixed_serve_decode_stream_trace_counts():
+    """The regression the benches gate on, pinned exactly: a cold mixed
+    serve+decode stream traces once per shape rung and allocates one pad
+    scratch per rung; replaying the same stream warm is silent."""
+    reg = PolyRegression.make(jax.random.PRNGKey(0))
+    serve = ServeEngine(predict_fn=regression_predict(reg),
+                        params=jax.random.normal(jax.random.PRNGKey(1),
+                                                 (4, 5)))
+    cfg = get_reduced("qwen3-4b")
+    decode = DecodeEngine(
+        model=Model(cfg, remat=False),
+        params=jax.vmap(lambda k: init_params(k, cfg))(
+            jax.random.split(jax.random.PRNGKey(2), 2)),
+        max_seq=32)
+
+    rng = np.random.default_rng(0)
+    queries = [rng.uniform(-1, 1, n).astype(np.float32)
+               for n in (3, 5, 3, 17, 6)]
+    prompts = [rng.integers(0, cfg.vocab_size, (b, t), dtype=np.int32)
+               for b, t in ((2, 5), (3, 5), (2, 9), (2, 5))]
+    serve_rungs = {bucket_size(q.size) for q in queries}            # 4, 8, 32
+    decode_rungs = {(bucket_size(b), bucket_size(t))
+                    for b, t in ((2, 5), (3, 5), (2, 9), (2, 5))}
+
+    def replay():
+        for q in queries:
+            serve(q)
+        for p in prompts:
+            decode.generate(p, 4)
+
+    with instrument() as cold:
+        replay()
+    assert cold.traces == {("ServeEngine", "stats"): len(serve_rungs),
+                           ("DecodeEngine", "decode"): len(decode_rungs)}
+    assert cold.pad_allocs == {"ServeEngine": len(serve_rungs),
+                               "DecodeEngine": len(decode_rungs)}
+    # the engines' public counters are views over the same bus
+    assert serve.num_traces == cold.traces_for("ServeEngine")
+    assert decode.num_traces == cold.traces_for("DecodeEngine")
+    assert serve.num_host_pad_allocs == len(serve_rungs)
+    assert decode.num_host_pad_allocs == len(decode_rungs)
+
+    with instrument() as warm:
+        replay()
+    assert warm.stream_flags() == {"retraced_in_stream": False,
+                                   "pad_allocs_in_stream": 0}
+    assert warm.traces == {}
