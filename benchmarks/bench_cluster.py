@@ -48,6 +48,7 @@ from repro.core import (
     speedup_vs_sync,
     truncate_to_evals,
 )
+from repro.obs import cluster_timeline, registry, write_chrome_trace
 from repro import samplers
 
 
@@ -236,6 +237,9 @@ def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
         "device_wall_s": {"async": round(async_dev_s, 3),
                           "sync": round(sync_dev_s, 3)},
         "traces_in_run": {"async": async_traces, "sync": sync_traces},
+        # per-worker commit spans of the first chains, Perfetto-openable
+        # (popped into <out>.timeline.json before the payload is written)
+        "timeline": cluster_timeline(async_scheds),
     }
 
 
@@ -276,6 +280,9 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_cluster.json")
     args = ap.parse_args()
     result = full(args.smoke)
+    stem = args.out[:-5] if args.out.endswith(".json") else args.out
+    write_chrome_trace(f"{stem}.timeline.json", result.pop("timeline"))
+    registry().write_snapshot(f"{stem}.metrics.json")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(_row(result)))
@@ -287,7 +294,7 @@ if __name__ == "__main__":
           f"(reached fixed's final W2 at "
           f"{bp['het_time_to_fixed_final_w2'] or float('nan'):.1f}; "
           f"advantage {bp['het_wallclock_advantage']}x)")
-    print(f"wrote {args.out}")
+    print(f"wrote {args.out} (+ .timeline.json, .metrics.json)")
     if result["speedup_vs_sync"] <= 1.0:
         raise SystemExit("async-vs-sync speedup did not exceed 1")
     adv = bp["het_wallclock_advantage"]

@@ -29,6 +29,8 @@ from repro.analysis import instrument
 from repro.cluster import DecodeEngine
 from repro.configs import get_reduced
 from repro.models.transformer import Model, init_params
+from repro.obs import decode_timeline, registry, write_chrome_trace
+from repro.obs.trace import tracer
 from repro.utils import bucket_size
 
 ARCH = "qwen3-4b"
@@ -98,20 +100,29 @@ def run(chain_sweep=(1, 4, 8), shard_sweep=(4, 8), requests: int = 40,
     kw = dict(requests=requests, max_batch=max_batch, max_prompt=max_prompt,
               max_new=max_new, seed=seed + 1)
     rows = []
-    for chains in chain_sweep:
-        eng = DecodeEngine(model=model, params=_bank(cfg, chains, seed),
-                           max_seq=max_seq)
-        rows.append(_measure(eng, **kw))
-    chains = max(chain_sweep)
-    n_dev = len(jax.devices())
-    for shards in shard_sweep:
-        if shards > n_dev or chains % shards:
-            continue
-        mesh = jax.make_mesh((shards,), ("data",),
-                             devices=jax.devices()[:shards])
-        eng = DecodeEngine(model=model, params=_bank(cfg, chains, seed),
-                           max_seq=max_seq, mesh=mesh)
-        rows.append(_measure(eng, **kw))
+    # span tracing stays ON through the measured streams: the stream-flag
+    # gates double as the proof that tracing adds no retrace/pad-alloc
+    tr = tracer()
+    tr.clear()
+    tr.enable()
+    try:
+        for chains in chain_sweep:
+            eng = DecodeEngine(model=model, params=_bank(cfg, chains, seed),
+                               max_seq=max_seq)
+            rows.append(_measure(eng, **kw))
+        chains = max(chain_sweep)
+        n_dev = len(jax.devices())
+        for shards in shard_sweep:
+            if shards > n_dev or chains % shards:
+                continue
+            mesh = jax.make_mesh((shards,), ("data",),
+                                 devices=jax.devices()[:shards])
+            eng = DecodeEngine(model=model, params=_bank(cfg, chains, seed),
+                               max_seq=max_seq, mesh=mesh)
+            rows.append(_measure(eng, **kw))
+    finally:
+        tr.disable()
+    timeline = decode_timeline(tr.drain())
 
     # acceptance: sharded C-chain decode is sublinear in C — C=8 over 8
     # devices must beat 8x the C=1 per-token cost
@@ -138,6 +149,9 @@ def run(chain_sweep=(1, 4, 8), shard_sweep=(4, 8), requests: int = 40,
                    "devices": n_dev},
         "rows": rows,
         "sublinear": sublinear,
+        # per-request decode.generate spans with amortized token slices
+        # (popped into <out>.timeline.json before the payload is written)
+        "timeline": timeline,
     }
 
 
@@ -169,6 +183,9 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_decode.json")
     args = ap.parse_args()
     result = run(**(SMOKE_KW if args.smoke else {}))
+    stem = args.out[:-5] if args.out.endswith(".json") else args.out
+    write_chrome_trace(f"{stem}.timeline.json", result.pop("timeline"))
+    registry().write_snapshot(f"{stem}.metrics.json")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(_row(result)))
@@ -182,7 +199,7 @@ if __name__ == "__main__":
         print(f"  sublinear: C={sub['chains']} sharded "
               f"{sub['sharded_per_token_ms']:.2f}ms/tok vs linear bound "
               f"{sub['linear_bound_ms']:.2f}ms ({sub['speedup_vs_linear']}x)")
-    print(f"wrote {args.out}")
+    print(f"wrote {args.out} (+ .timeline.json, .metrics.json)")
     if any(r["retraced_in_stream"] for r in result["rows"]):
         raise SystemExit("decode path retraced inside the prompt stream "
                          "(more than one trace per (bucket, max_new) pair)")

@@ -27,6 +27,7 @@ from repro.analysis import instrument
 from repro.cluster import ServeEngine, bucket_size
 from repro.core import PolyRegression
 from repro.models import regression_predict
+from repro.obs import registry
 
 SIGMA = 1e-3
 
@@ -137,6 +138,8 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     result = run(**(SMOKE_KW if args.smoke else {}))
+    stem = args.out[:-5] if args.out.endswith(".json") else args.out
+    registry().write_snapshot(f"{stem}.metrics.json")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(_row(result)))
@@ -144,7 +147,7 @@ if __name__ == "__main__":
         print(f"  chains={r['chains']:4d} shards={r['shards']} "
               f"qps={r['qps']:10.1f} p50={r['p50_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms traces={r['traces']}")
-    print(f"wrote {args.out}")
+    print(f"wrote {args.out} (+ .metrics.json)")
     if any(r["retraced_in_stream"] for r in result["rows"]):
         raise SystemExit("serve path retraced inside a request stream "
                          "(more than one trace per shape bucket)")

@@ -45,6 +45,11 @@ The structural fields the exact gates read (``traces``,
 benchmarks from :mod:`repro.analysis.instrument` reports — a trace or a
 host pad allocation inside the timed stream raises the flag.
 
+When a ``BENCH_*.metrics.json`` registry snapshot (written by the
+benchmarks next to the payload) exists beside both the fresh JSON and the
+baseline, the script also prints per-metric deltas — informative only,
+never part of the gate.
+
 To accept an intentional change, re-run the benchmark and commit the new
 JSON as the baseline.
 
@@ -221,6 +226,69 @@ def _summary(current: dict, baseline: dict) -> str:
             f"(baseline {baseline['final_w2_async']:.4f})")
 
 
+def _metrics_path(bench_path: str) -> str:
+    """``BENCH_x.json`` → the ``BENCH_x.metrics.json`` snapshot the
+    benchmark writes next to it (repro.obs.metrics registry)."""
+    return (bench_path[:-5] if bench_path.endswith(".json")
+            else bench_path) + ".metrics.json"
+
+
+def _metric_scalars(snapshot: dict) -> dict:
+    """Flatten a registry snapshot to comparable scalars: counter/gauge
+    values plus ``<hist>.count`` / ``<hist>.mean`` per histogram."""
+    out = {}
+    for name, d in snapshot.items():
+        if d.get("type") in ("counter", "gauge"):
+            out[name] = d["value"]
+        elif d.get("type") == "histogram":
+            out[f"{name}.count"] = d["count"]
+            if d["count"]:
+                out[f"{name}.mean"] = d["sum"] / d["count"]
+    return out
+
+
+def metric_deltas(current: dict, baseline: dict) -> list[str]:
+    """Non-gating deltas between two registry snapshots, one line per
+    metric both sides report (new/vanished metrics are called out but
+    never fail the gate — the snapshots are observability, not contract)."""
+    cur, base = _metric_scalars(current), _metric_scalars(baseline)
+    lines = []
+    for name in sorted(set(cur) & set(base)):
+        c, b = cur[name], base[name]
+        rel = f" ({(c - b) / b:+.1%})" if b else ""
+        if c != b:
+            lines.append(f"  {name}: {b:g} -> {c:g}{rel}")
+    only_cur = sorted(set(cur) - set(base))
+    only_base = sorted(set(base) - set(cur))
+    if only_cur:
+        lines.append(f"  new metrics (no baseline): {', '.join(only_cur)}")
+    if only_base:
+        lines.append(f"  baseline metrics missing from this run: "
+                     f"{', '.join(only_base)}")
+    return lines
+
+
+def report_metric_deltas(bench_path: str, baseline_path: str,
+                         out=None) -> None:
+    """Print metric-snapshot deltas when both sides have one (informative
+    only; never affects the exit status)."""
+    import os
+
+    out = out if out is not None else sys.stdout
+    paths = _metrics_path(bench_path), _metrics_path(baseline_path)
+    if not all(os.path.exists(p) for p in paths):
+        return
+    with open(paths[0]) as f:
+        current = json.load(f)
+    with open(paths[1]) as f:
+        baseline = json.load(f)
+    lines = metric_deltas(current, baseline)
+    if lines:
+        print("metric deltas vs baseline snapshot (non-gating):", file=out)
+        for line in lines:
+            print(line, file=out)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("bench", help="fresh BENCH_*.json to validate")
@@ -256,6 +324,7 @@ def main(argv=None) -> int:
                      tol_w2=args.tol_w2, tol_qps=args.tol_qps,
                      tol_p99=args.tol_p99, tol_tps=args.tol_tps)
     print(_summary(current, baseline))
+    report_metric_deltas(args.bench, args.baseline)
     for msg in failures:
         print(f"REGRESSION: {msg}")
     if not failures:

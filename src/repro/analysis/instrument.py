@@ -15,11 +15,21 @@ event bus:
   are thin views over the handle;
 - callers wrap a region in :func:`instrument` and get a :class:`Report` of
   everything that happened inside it: per-(engine, function) trace counts,
-  pad allocs, XLA compile events (via :mod:`jax`'s monitoring listener,
-  best-effort), and captured donation warnings.  A measured request stream
-  whose rungs are warm must produce an *empty* report —
+  pad allocs, XLA compile events and wall-time (via :mod:`jax`'s monitoring
+  listener, best-effort), and captured donation warnings.  A measured
+  request stream whose rungs are warm must produce an *empty* report —
   :meth:`Report.stream_flags` is that assertion packaged for the benchmark
   JSON rows, and ``scripts/check_bench.py`` gates on its fields.
+
+Compile **wall-time** rides the same listener: jax's monitoring bus emits
+per-phase durations (jaxpr trace, MLIR lowering, backend compile) with no
+function identity attached, but the engines' ``Counters.trace(fn)`` side
+effect fires *during* tracing — so the bus attributes each duration to the
+most recently traced (engine, function) pair.  Totals land in
+:attr:`Report.compile_ms` per function and, process-wide, in the
+:mod:`repro.obs.metrics` registry (``xla.compile_ms_total`` counter plus a
+cumulative ``xla.compile_ms/<engine>/<fn>`` gauge per compiled function),
+so a trace-count regression comes with its compile-time cost.
 
 The context manager nests (inner regions report a subset of outer ones) and
 costs two dict updates per event, so it is safe to leave on in production
@@ -39,6 +49,8 @@ __all__ = ["Counters", "Report", "counters", "instrument"]
 
 _lock = threading.Lock()
 _active: list["Report"] = []  # instrument() stack, innermost last
+_last_traced = [""]  # "label/fn" of the newest jit trace (compile attribution)
+_compile_ms_by_fn: Counter = Counter()  # process-lifetime per-fn compile ms
 
 
 class Counters:
@@ -63,6 +75,7 @@ class Counters:
         with _lock:
             self.traces += 1
             self.per_fn[fn] += 1
+            _last_traced[0] = f"{self.label}/{fn}" if fn else self.label
             for rep in _active:
                 rep._traces[(self.label, fn)] += 1
 
@@ -76,6 +89,7 @@ class Counters:
 
 def counters(label: str) -> Counters:
     """A fresh per-engine instrument handle."""
+    _ensure_compile_listener()  # engines exist before they compile
     return Counters(label)
 
 
@@ -87,6 +101,9 @@ class Report:
 
     _traces: Counter = field(default_factory=Counter)
     _pad_allocs: Counter = field(default_factory=Counter)
+    #: per-"label/fn" compile wall-time (seconds) observed inside the region
+    #: by jax's monitoring bus, attributed to the most recent trace
+    _compile_secs: Counter = field(default_factory=Counter)
     #: XLA jaxpr-trace events observed by jax's monitoring bus (best-effort:
     #: 0 when the listener API is unavailable; a cross-check that the
     #: engines' python-side counters are not lying about retraces)
@@ -116,6 +133,17 @@ class Report:
     def traces_for(self, label: str) -> int:
         return sum(n for (lbl, _), n in self._traces.items() if lbl == label)
 
+    @property
+    def compile_ms(self) -> dict:
+        """{"label/fn": compile wall-time ms} inside the region (best-effort
+        attribution; durations before the first trace land under "")."""
+        return {k: v * 1e3 for k, v in sorted(self._compile_secs.items())}
+
+    @property
+    def compile_time_ms(self) -> float:
+        """Total XLA compile wall-time (all phases, ms) inside the region."""
+        return sum(self._compile_secs.values()) * 1e3
+
     def stream_flags(self) -> dict:
         """The hot-stream invariant, packaged for a benchmark JSON row:
         a measured stream over warm rungs must trace nothing and allocate
@@ -133,37 +161,56 @@ class Report:
             "pad_allocs": {lbl: n
                            for lbl, n in sorted(self._pad_allocs.items())},
             "xla_compiles": self.xla_compiles,
+            "compile_ms": {k: round(v, 3)
+                           for k, v in self.compile_ms.items()},
             "donation_warnings": len(self.donation_warnings),
         }
 
 
-def _install_compile_listener(report: Report):
-    """Count XLA jaxpr-trace events into ``report`` via jax's monitoring
-    bus.  Returns an uninstall thunk; a no-op pair when the (private,
-    version-dependent) API is missing."""
+_listener_installed = [False]
+
+
+def _ensure_compile_listener() -> None:
+    """Install the process-global compile listener once (idempotent,
+    best-effort: a silent no-op when jax or its private monitoring API is
+    missing).  The listener feeds every active :func:`instrument` report
+    *and* the :mod:`repro.obs.metrics` registry, so compile cost is visible
+    even for compiles that happen outside any instrumented region (warmup
+    loops, first requests)."""
+    if _listener_installed[0]:
+        return
+    _listener_installed[0] = True
     try:
         from jax._src import monitoring
         from jax._src.dispatch import JAXPR_TRACE_EVENT
     except ImportError:
-        return lambda: None
+        return
 
-    def listener(event: str, _duration: float, **_kw) -> None:
-        if event == JAXPR_TRACE_EVENT:
-            report.xla_compiles += 1
+    from repro.obs.metrics import registry
+
+    def listener(event: str, duration: float, **_kw) -> None:
+        if "/jax/core/compile" not in event:
+            return
+        with _lock:
+            key = _last_traced[0]
+            _compile_ms_by_fn[key] += duration * 1e3
+            total_fn_ms = _compile_ms_by_fn[key]
+            for rep in _active:
+                rep._compile_secs[key] += duration
+                if event == JAXPR_TRACE_EVENT:
+                    rep.xla_compiles += 1
+        reg = registry()
+        reg.counter("xla.compile_ms_total",
+                    "cumulative XLA compile wall-time (all phases)"
+                    ).inc(duration * 1e3)
+        reg.gauge(f"xla.compile_ms/{key or 'other'}",
+                  "cumulative compile wall-time of one compiled function"
+                  ).set(total_fn_ms)
 
     try:
         monitoring.register_event_duration_secs_listener(listener)
     except Exception:
-        return lambda: None
-
-    def uninstall():
-        try:
-            monitoring._unregister_event_duration_listener_by_callback(
-                listener)
-        except Exception:
-            pass
-
-    return uninstall
+        pass
 
 
 @contextmanager
@@ -186,7 +233,7 @@ def instrument(*, transfer_guard: Optional[str] = None,
         row.update(rep.stream_flags())      # -> benchmark JSON / check_bench
     """
     report = Report()
-    uninstall = _install_compile_listener(report)
+    _ensure_compile_listener()
     catcher = None
     caught: list = []
     if capture_donation_warnings:
@@ -206,7 +253,6 @@ def instrument(*, transfer_guard: Optional[str] = None,
     finally:
         with _lock:
             _active.remove(report)
-        uninstall()
         if catcher is not None:
             catcher.__exit__(None, None, None)
             for w in caught:

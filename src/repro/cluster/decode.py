@@ -53,6 +53,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.analysis.instrument import counters as _counters
 from repro.models.common import partition_tree
+from repro.obs.metrics import LATENCY_MS_BUCKETS, registry as _registry
+from repro.obs.trace import now as _now, span as _span
 from repro.models.predictive import bma_logits
 from repro.samplers.base import SamplerState
 from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
@@ -115,6 +117,18 @@ class DecodeEngine:
         self._counters = _counters("DecodeEngine")
         self._scratch = HostScratch(self._counters)
         self._cache: dict = {}  # B rung -> persistent KV-cache bank
+        reg = _registry()
+        self._m_requests = reg.counter("decode.requests", "generate() calls")
+        self._m_tokens = reg.counter("decode.tokens",
+                                     "tokens generated (true batch rows)")
+        self._m_token_ms = reg.histogram(
+            "decode.per_token_ms", LATENCY_MS_BUCKETS,
+            "request wall time / max_new_tokens (amortized; the decode "
+            "loop is one fused scan)")
+        self._m_batch_util = reg.gauge(
+            "decode.batch_utilization", "last request's B / batch rung")
+        self._m_bank_rungs = reg.gauge(
+            "decode.bank_rungs", "KV-cache bank rungs resident")
         if self.mesh is not None:
             n_shards = self.mesh.shape[self.chain_axis]
             if self.num_chains % n_shards:
@@ -251,19 +265,27 @@ class DecodeEngine:
                 f"prompt rung {t_rung} + max_new_tokens {max_new_tokens} "
                 f"overflows the {self.max_seq}-slot cache of a full-attention "
                 "model; raise max_seq")
-        buf = self._scratch.get(("prompt", b_rung, t_rung), (b_rung, t_rung),
-                                np.int32)
-        buf[:B, :T] = tokens
-        buf[:B, T:] = tokens[:, -1:]  # right pad: causally invisible
-        buf[B:] = buf[B - 1]          # edge-replicate padded batch rows
-        cache = self._rung_cache(b_rung)
-        greedy = key is None
-        k = jnp.zeros((2,), jnp.uint32) if greedy else key
-        toks, logps, cache = self._run(
-            int(max_new_tokens), greedy, self.params, cache, buf,
-            np.asarray(T, np.int32), k)
-        self._cache[b_rung] = cache  # donated in, reused next request
-        out = np.asarray(toks)[:B]
+        t_start = _now()
+        with _span("decode.generate", B=B, T=T, b_rung=b_rung, t_rung=t_rung,
+                   new_tokens=int(max_new_tokens), chains=self.num_chains):
+            buf = self._scratch.get(("prompt", b_rung, t_rung),
+                                    (b_rung, t_rung), np.int32)
+            buf[:B, :T] = tokens
+            buf[:B, T:] = tokens[:, -1:]  # right pad: causally invisible
+            buf[B:] = buf[B - 1]          # edge-replicate padded batch rows
+            cache = self._rung_cache(b_rung)
+            greedy = key is None
+            k = jnp.zeros((2,), jnp.uint32) if greedy else key
+            toks, logps, cache = self._run(
+                int(max_new_tokens), greedy, self.params, cache, buf,
+                np.asarray(T, np.int32), k)
+            self._cache[b_rung] = cache  # donated in, reused next request
+            out = np.asarray(toks)[:B]  # blocks: the span sees real latency
+        self._m_requests.inc()
+        self._m_tokens.inc(B * int(max_new_tokens))
+        self._m_token_ms.observe((_now() - t_start) * 1e3 / max_new_tokens)
+        self._m_batch_util.set(B / b_rung)
+        self._m_bank_rungs.set(float(len(self._cache)))
         return DecodeResult(
             tokens=out,
             logits=np.asarray(logps)[:B] if self.return_logits else None)

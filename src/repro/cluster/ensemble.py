@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.metrics.wasserstein import sinkhorn_w2, w2_empirical_1d
+from repro.obs.metrics import registry as _registry
 from repro.samplers.base import Sampler, SamplerState
 from repro.utils import tree_broadcast_leading, tree_normal_like
 
@@ -226,12 +227,20 @@ def diagnostics_recorder(*, every: int = 1, window: int = 64) -> Callable:
         if len(history) < 4:  # too few snapshots for a split estimate
             return
         draws = jnp.stack(history, axis=1)  # (C, n, d)
-        record.append({
+        row = {
             "step": step_end,
             "rhat_max": float(jnp.max(split_rhat(draws))),
             "ess_min": float(jnp.min(ess(draws))),
             "n_draws": int(draws.shape[1]),
-        })
+        }
+        record.append(row)
+        reg = _registry()
+        reg.gauge("cluster.rhat_max",
+                  "worst-coordinate split R-hat of the chain cloud"
+                  ).set(row["rhat_max"])
+        reg.gauge("cluster.ess_min",
+                  "worst-coordinate effective sample size"
+                  ).set(row["ess_min"])
 
     def hook(step_end: int, state: SamplerState, _aux) -> None:
         if step_end - last[0] < every:
@@ -284,6 +293,8 @@ def w2_recorder(target_samples: jnp.ndarray, *, every: int = 1,
         record.append({"step": step_end, "w2": w2,
                        "commit_time": seen_time[0],
                        "grad_evals": seen_evals[0]})
+        _registry().gauge(
+            "cluster.w2", "newest empirical W2 of the chain cloud").set(w2)
 
     def hook(step_end: int, state: SamplerState, aux) -> None:
         if isinstance(aux, dict) and "commit_time" in aux:

@@ -47,6 +47,7 @@ from repro.cluster.schedule import (
 )
 from repro.core.delay import validate_staleness
 from repro.core.delay_model import BATCH_POLICIES
+from repro.obs.metrics import STALENESS_BUCKETS, registry as _registry
 from repro.samplers.base import Sampler, SamplerState
 from repro.samplers.transforms import MaskedBatch
 from repro.train.engine import Hook, drive_chunks
@@ -135,6 +136,17 @@ class ClusterEngine:
         self._masked_chunks: dict = {}  # pad width -> jitted masked chunk
         self._make_batches = (jax.jit(jax.vmap(jax.vmap(self.batch_fn)))
                               if self.batch_fn is not None else None)
+        reg = _registry()
+        self._m_staleness = reg.histogram(
+            "cluster.staleness", STALENESS_BUCKETS,
+            "per-commit staleness tau = version - read_version")
+        self._m_commits = reg.counter(
+            "cluster.commits", "commits executed (steps x chains)")
+        self._m_grad_evals = reg.counter(
+            "cluster.grad_evals",
+            "per-example gradient evaluations (non-fixed batch policies)")
+        self._m_max_stale = reg.gauge(
+            "cluster.max_staleness", "largest tau in the newest schedule")
 
     @property
     def num_traces(self) -> int:
@@ -336,9 +348,12 @@ class ClusterEngine:
         """
         extra, commit_times, batch_info = self._compile_schedule(schedule,
                                                                  steps)
-        max_delay = int((np.arange(steps, dtype=np.int64)[:, None]
-                         - extra["rv"]).max(initial=0))
+        staleness = (np.arange(steps, dtype=np.int64)[:, None] - extra["rv"])
+        max_delay = int(staleness.max(initial=0))
         validate_staleness(max_delay, state.inner, context="schedule")
+        self._m_staleness.observe_many(staleness.ravel())
+        self._m_commits.inc(staleness.size)
+        self._m_max_stale.set(float(max_delay))
         # schedule versions are relative to this run's first commit; rebase
         # onto the state's commit counter so continuation runs keep the
         # endogenous staleness (step - read_version) equal to the schedule's
@@ -366,6 +381,7 @@ class ClusterEngine:
             extra["size"] = sizes
             extra["off"] = (offs % n_data).astype(np.int32)
             evals = np.cumsum(sizes.astype(np.int64), axis=0)
+            self._m_grad_evals.inc(int(sizes.sum()))
 
             def chunk_info(done: int, n: int):
                 rung = bucket_size(int(sizes[done:done + n].max()),

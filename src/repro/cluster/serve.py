@@ -37,6 +37,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.instrument import Counters as _Counters, counters as _counters
+from repro.obs.metrics import LATENCY_MS_BUCKETS, registry as _registry
+from repro.obs.trace import now as _now, span as _span
 from repro.samplers.base import SamplerState
 from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
 
@@ -195,6 +197,16 @@ class ServeEngine:
         self.num_chains = int(leaves[0].shape[0])
         self._counters = _counters("ServeEngine")
         self._host_scratch = HostScratch(self._counters)
+        reg = _registry()
+        self._m_requests = reg.counter("serve.requests", "serve() calls")
+        self._m_queries = reg.counter("serve.queries",
+                                      "queries answered (pre-padding)")
+        self._m_latency = reg.histogram(
+            "serve.request_ms", LATENCY_MS_BUCKETS,
+            "serve() wall time per request, result on host")
+        self._m_util = reg.gauge(
+            "serve.bucket_utilization",
+            "last request's Q / padded bucket size")
         if self.buckets is not None:
             self.buckets = sorted(int(b) for b in self.buckets)
         self._qs = jnp.asarray(self.quantiles, jnp.float32)
@@ -301,10 +313,16 @@ class ServeEngine:
         """
         q = int(jax.tree_util.tree_leaves(queries)[0].shape[0])
         n = bucket_size(q, self.buckets)
-        padded = _pad_queries(queries, n, copy_exact=self.donate,
-                              scratch=self._host_scratch)
-        res = self._stats(self.params, padded)
-        mean, var, quantiles = (np.asarray(x) for x in res)
+        t0 = _now()
+        with _span("serve.request", Q=q, bucket=n):
+            padded = _pad_queries(queries, n, copy_exact=self.donate,
+                                  scratch=self._host_scratch)
+            res = self._stats(self.params, padded)
+            mean, var, quantiles = (np.asarray(x) for x in res)
+        self._m_requests.inc()
+        self._m_queries.inc(q)
+        self._m_latency.observe((_now() - t0) * 1e3)
+        self._m_util.set(q / n)
         return ServeResult(mean=mean[:q], var=var[:q],
                            quantiles=quantiles[:, :q])
 

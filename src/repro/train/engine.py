@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.instrument import counters as _counters
+from repro.obs.metrics import registry as _registry
+from repro.obs.trace import span as _span
 from repro.samplers.base import Sampler, SamplerState
 
 PyTree = Any
@@ -37,9 +39,18 @@ Hook = Callable[[int, SamplerState, Any], None]
 
 def log_hook(every: int = 10, log_fn: Callable[[str], None] = print,
              key: str = "loss") -> Hook:
-    """Print ``key`` from the newest aux every ``every`` steps (chunk-aligned)."""
+    """Print ``key`` from the newest aux every ``every`` steps (chunk-aligned).
+
+    Every line also lands in the :mod:`repro.obs.metrics` registry — a
+    ``train.log_lines`` counter and a ``train.last_<key>`` gauge holding the
+    newest logged scalar — so dashboards read the same value the console
+    shows.  The printed format is unchanged (and pinned by tests).
+    """
     import time
 
+    reg = _registry()
+    lines = reg.counter("train.log_lines", "log_hook lines emitted")
+    newest = reg.gauge(f"train.last_{key}", "newest logged aux scalar")
     t0 = time.time()
     last = [-every]
 
@@ -54,6 +65,8 @@ def log_hook(every: int = 10, log_fn: Callable[[str], None] = print,
         if not leaf:
             return
         scalar = float(np.asarray(leaf[0])[-1])
+        lines.inc()
+        newest.set(scalar)
         log_fn(f"step {step_end - 1:5d} {key} {scalar:8.4f} "
                f"({time.time() - t0:6.1f}s)")
 
@@ -145,25 +158,30 @@ def drive_chunks(run_chunk, state: SamplerState, *, steps: int,
     done = 0
     while done < steps:
         n = min(chunk_size, steps - done)
-        if batches is None:
-            key, chunk_batches = gen_batches(key, n)
-        elif slice_batches:
-            chunk_batches = jax.tree_util.tree_map(
-                lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), batches)
-        else:
-            chunk_batches = batches
-        chunk_extra = jax.tree_util.tree_map(
-            lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), extra)
-        static = chunk_info(done, n) if chunk_info is not None else ()
-        state, aux = run_chunk(state, chunk_batches, chunk_extra, *static)
-        done += n
-        if host_rows:
-            aux = merge_host_aux(aux, {k: np.asarray(v[done - n:done])
-                                       for k, v in host_rows.items()})
-        if collect_aux:
-            aux_chunks.append(aux)
-        for hook in hooks:
-            hook(done, state, aux)
+        # host-side chunk span (null ctx when tracing is disabled): covers
+        # batch slicing, the jitted dispatch, and the hooks — device
+        # execution is async, so hooks that pull values sync inside it
+        with _span("engine.chunk", start=done, size=n):
+            if batches is None:
+                key, chunk_batches = gen_batches(key, n)
+            elif slice_batches:
+                chunk_batches = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, done, n),
+                    batches)
+            else:
+                chunk_batches = batches
+            chunk_extra = jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, done, n), extra)
+            static = chunk_info(done, n) if chunk_info is not None else ()
+            state, aux = run_chunk(state, chunk_batches, chunk_extra, *static)
+            done += n
+            if host_rows:
+                aux = merge_host_aux(aux, {k: np.asarray(v[done - n:done])
+                                           for k, v in host_rows.items()})
+            if collect_aux:
+                aux_chunks.append(aux)
+            for hook in hooks:
+                hook(done, state, aux)
     flush_hooks(hooks, done, state)
 
     if not aux_chunks:

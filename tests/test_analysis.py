@@ -141,7 +141,8 @@ def test_report_to_dict_is_json_ready():
     assert d["traces"] == {"Eng/stats": 1}
     assert d["pad_allocs"] == {"Eng": 1}
     assert set(d) == {"traces", "pad_allocs", "xla_compiles",
-                      "donation_warnings"}
+                      "compile_ms", "donation_warnings"}
+    assert all(isinstance(v, float) for v in d["compile_ms"].values())
 
 
 def test_donation_warnings_captured_others_reemitted():

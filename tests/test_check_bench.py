@@ -237,3 +237,53 @@ def test_cli_gates_the_committed_cluster_baseline_against_itself():
     baseline = os.path.join(root, "benchmarks", "baselines",
                             "BENCH_cluster.json")
     assert check_bench.main([baseline, "--baseline", baseline]) == 0
+
+
+# ---------------------------------------------------------------------------
+# non-gating metric-snapshot deltas
+# ---------------------------------------------------------------------------
+def test_metric_deltas_compares_shared_scalars():
+    cur = {"decode.tokens": {"type": "counter", "value": 120.0},
+           "serve.request_ms": {"type": "histogram", "bounds": [1.0],
+                                "counts": [3, 1], "count": 4, "sum": 8.0},
+           "new.metric": {"type": "gauge", "value": 1.0}}
+    base = {"decode.tokens": {"type": "counter", "value": 100.0},
+            "serve.request_ms": {"type": "histogram", "bounds": [1.0],
+                                 "counts": [4, 0], "count": 4, "sum": 2.0},
+            "old.metric": {"type": "gauge", "value": 2.0}}
+    lines = check_bench.metric_deltas(cur, base)
+    text = "\n".join(lines)
+    assert "decode.tokens: 100 -> 120 (+20.0%)" in text
+    assert "serve.request_ms.mean: 0.5 -> 2" in text
+    assert "new metrics (no baseline): new.metric" in text
+    assert "baseline metrics missing from this run: old.metric" in text
+    # identical snapshots produce no lines at all
+    assert check_bench.metric_deltas(base, base) == []
+
+
+def test_metric_deltas_are_printed_but_never_gate(tmp_path, capsys):
+    payload = {"config": {}, "speedup_vs_sync": 1.3, "final_w2_async": 0.5,
+               "batch_policy": {"het_wallclock_advantage": 2.0}}
+    for name, tokens in (("BENCH_cluster.json", 100.0),
+                         ("base.json", 50.0)):
+        (tmp_path / name).write_text(json.dumps(payload))
+        (tmp_path / name.replace(".json", ".metrics.json")).write_text(
+            json.dumps({"decode.tokens":
+                        {"type": "counter", "value": tokens}}))
+    rc = check_bench.main([str(tmp_path / "BENCH_cluster.json"),
+                           "--baseline", str(tmp_path / "base.json")])
+    out = capsys.readouterr().out
+    assert rc == 0  # a 2x metric delta is informative, not a regression
+    assert "metric deltas vs baseline snapshot (non-gating):" in out
+    assert "decode.tokens: 50 -> 100 (+100.0%)" in out
+
+
+def test_metric_deltas_skipped_without_snapshots(tmp_path, capsys):
+    payload = {"config": {}, "speedup_vs_sync": 1.3, "final_w2_async": 0.5,
+               "batch_policy": {"het_wallclock_advantage": 2.0}}
+    for name in ("BENCH_cluster.json", "base.json"):
+        (tmp_path / name).write_text(json.dumps(payload))
+    rc = check_bench.main([str(tmp_path / "BENCH_cluster.json"),
+                           "--baseline", str(tmp_path / "base.json")])
+    assert rc == 0
+    assert "metric deltas" not in capsys.readouterr().out
