@@ -18,6 +18,15 @@ scaling, and the recorded frontier is W2 against cumulative grad evals and
 against simulated wall clock.  The run fails unless inverse-speed batching
 reaches the fixed arm's final W2 in less simulated wall clock.
 
+The scenario matrix runs the sampler zoo through the same harness: SGLD,
+SVRG-LD, stale-corrected SGLD, SGHMC, and SGLD over an AR(1)-dependent
+data stream all consume the *same* async worker schedules, the same
+per-chain budget of ``commits x base_batch`` example-gradient evaluations
+through the masked bucket-padded executor path, and the same closed-form
+Gibbs target — so the recorded W2-vs-simulated-wallclock frontiers are
+directly comparable across rows, and ``check_bench.py`` gates each row's
+final W2 against the committed baseline.
+
 ``python benchmarks/bench_cluster.py [--smoke] [--out BENCH_cluster.json]``
 """
 
@@ -48,6 +57,7 @@ from repro.core import (
     speedup_vs_sync,
     truncate_to_evals,
 )
+from repro.data import ar1_stream
 from repro.obs import cluster_timeline, registry, write_chrome_trace
 from repro import samplers
 
@@ -188,6 +198,115 @@ def run_batch_policies(num_chains: int = 64, workers: int = 8,
     }
 
 
+def run_scenarios(num_chains: int = 64, workers: int = 8,
+                  commits: int = 960, d: int = 2, gamma: float = 0.02,
+                  sigma: float = 0.5, base_batch: int = 8,
+                  noise_scale: float = 1.0, anchor_every: int = 64,
+                  friction: float = 1.0, stale_strength: float = 0.1,
+                  stale_gamma_scale: float = 0.05, rho: float = 0.9,
+                  n_target: int = 256, seed: int = 0,
+                  chunks: int = 16) -> dict:
+    """The sampler-zoo scenario matrix: one row per sampler, matched
+    everything else.
+
+    Every row shares the quadratic target, the async worker schedules
+    (hence the same endogenous staleness and the same simulated wall
+    clock), and a per-chain budget of ``commits x base_batch``
+    example-gradient evaluations consumed through the masked
+    ``batch_policy="explicit"`` executor path.  The per-example oracle is
+    quadratic drift plus additive data noise, ``g(p, e) = A(p - x*) +
+    noise_scale * e`` — so the minibatch gradient variance comes from the
+    data, SVRG's control variate ``g_B(x) - g_B(x_anchor)`` genuinely
+    cancels it, and the AR(1) row changes *only* the temporal dependence
+    of the stream (same stationary marginal).
+
+    Rows:
+
+    - ``sgld``   plain delayed-read SGLD — the reference frontier.
+    - ``svrg``   :func:`repro.samplers.svrg`; anchor refreshed every
+      ``anchor_every`` commits inside the scanned carry.  Each commit
+      additionally evaluates the minibatch oracle at the anchor (same
+      examples, 2x oracle calls) — reported, not hidden.
+    - ``stale``  SGLD + :func:`repro.samplers.stale_correction` (Taylor
+      compensation ``stale_strength``, step shrink ``stale_gamma_scale``);
+      the explicit compensation is only stable while ``strength * |g| *
+      |x - x_hat|`` stays below ~1, which with ``jitter=2`` transients and
+      ``tau ~ 8`` bounds the usable strength near 0.1 here.
+    - ``sghmc``  :func:`repro.samplers.sghmc` with drag ``friction``.
+    - ``ar1``    plain SGLD over an :func:`repro.data.ar1_stream`
+      dependent stream with autocorrelation ``rho``.
+    """
+    quad = Quadratic.make(jax.random.PRNGKey(seed), d=d, m=1.0, L=3.0)
+    target = _target_samples(quad, sigma, n_target, seed + 1)
+    per_ex = lambda p, e: quad.grad(p, None) + noise_scale * e  # noqa: E731
+    n_rows = commits * base_batch
+    data_iid = np.asarray(jax.random.normal(jax.random.PRNGKey(seed + 3),
+                                            (n_rows, d)), np.float32)
+    data_ar1 = np.asarray(ar1_stream(jax.random.PRNGKey(seed + 3),
+                                     steps=commits, batch=base_batch, d=d,
+                                     rho=rho), np.float32).reshape(n_rows, d)
+    full_grad = lambda p: (quad.grad(p, None)  # noqa: E731
+                           + noise_scale * jnp.asarray(data_iid.mean(0)))
+
+    wm = WorkerModel(num_workers=workers, seed=seed)
+    scheds = ensemble_async(wm, commits, num_chains, seed=seed)
+    tau = max(max(s.max_delay for s in scheds), 1)
+    chunk = max(1, commits // chunks)
+
+    def arm(sampler, data):
+        hook = w2_recorder(target, every=chunk, num_iters=100)
+        engine = ClusterEngine(sampler, num_chains=num_chains,
+                               chunk_size=chunk, batch_policy="explicit",
+                               hooks=[hook])
+        state = engine.init(jnp.zeros(d), jax.random.PRNGKey(seed + 2),
+                            jitter=2.0)
+        t0 = time.time()
+        with instrument() as rep:
+            state, _ = engine.run(state, steps=commits, schedule=scheds,
+                                  data=data,
+                                  batch_sizes=np.full(commits, base_batch))
+            jax.block_until_ready(state.params)
+        return hook.record, time.time() - t0, rep.num_traces
+
+    common = dict(gamma=gamma, sigma=sigma, tau=tau, base_batch=base_batch)
+    rows_spec = {
+        "sgld": (samplers.sgld("consistent", per_ex, **common), data_iid),
+        "svrg": (samplers.svrg("consistent", per_ex, full_grad,
+                               anchor_every=anchor_every, **common),
+                 data_iid),
+        "stale": (samplers.sgld("consistent", per_ex,
+                                stale_strength=stale_strength,
+                                stale_gamma_scale=stale_gamma_scale,
+                                **common), data_iid),
+        "sghmc": (samplers.sghmc("consistent", per_ex, friction=friction,
+                                 **common), data_iid),
+        "ar1": (samplers.sgld("consistent", per_ex, **common), data_ar1),
+    }
+    rows = {}
+    for name, (sampler, data) in rows_spec.items():
+        rec, dev_s, traces = arm(sampler, data)
+        rows[name] = {
+            "final_w2": rec[-1]["w2"],
+            "wallclock": rec[-1]["commit_time"],
+            "grad_evals": rec[-1]["grad_evals"],
+            "oracle_calls_per_commit": 2 if name == "svrg" else 1,
+            "curve": _policy_curves(rec),
+            "device_wall_s": round(dev_s, 3),
+            "traces_in_run": traces,
+        }
+    return {
+        "config": {"num_chains": num_chains, "workers": workers,
+                   "commits": commits, "d": d, "gamma": gamma,
+                   "sigma": sigma, "base_batch": base_batch,
+                   "budget_grad_evals": commits * base_batch,
+                   "noise_scale": noise_scale, "anchor_every": anchor_every,
+                   "friction": friction, "stale_strength": stale_strength,
+                   "stale_gamma_scale": stale_gamma_scale, "rho": rho,
+                   "tau_realized": tau, "n_target": n_target, "seed": seed},
+        "rows": rows,
+    }
+
+
 def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
         d: int = 2, gamma: float = 0.05, sigma: float = 0.5,
         n_target: int = 256, seed: int = 0, chunks: int = 16):
@@ -246,6 +365,7 @@ def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
 def _row(result: dict) -> dict:
     us = result["device_wall_s"]["async"] / result["config"]["commits"] * 1e6
     bp = result.get("batch_policy", {})
+    scen = result.get("scenarios", {}).get("rows", {})
     return {
         "bench": "cluster", "us_per_call": round(us, 1),
         "chains": result["config"]["num_chains"],
@@ -254,18 +374,24 @@ def _row(result: dict) -> dict:
         "final_w2_async": round(result["final_w2_async"], 4),
         "final_w2_sync": round(result["final_w2_sync"], 4),
         "het_wallclock_advantage": bp.get("het_wallclock_advantage"),
+        "scenario_w2": {name: round(r["final_w2"], 4)
+                        for name, r in scen.items()},
     }
 
 
 SMOKE_KW = dict(num_chains=8, workers=4, commits=240, chunks=24, n_target=128)
 SMOKE_POLICY_KW = dict(num_chains=8, workers=4, fixed_commits=240, chunks=24,
                        n_target=128)
+SMOKE_SCENARIO_KW = dict(num_chains=8, workers=4, commits=240, chunks=24,
+                         n_target=128, anchor_every=48)
 
 
 def full(fast: bool = True) -> dict:
     result = run(**(SMOKE_KW if fast else {}))
     result["batch_policy"] = run_batch_policies(
         **(SMOKE_POLICY_KW if fast else {}))
+    result["scenarios"] = run_scenarios(
+        **(SMOKE_SCENARIO_KW if fast else {}))
     return result
 
 
@@ -294,6 +420,11 @@ if __name__ == "__main__":
           f"(reached fixed's final W2 at "
           f"{bp['het_time_to_fixed_final_w2'] or float('nan'):.1f}; "
           f"advantage {bp['het_wallclock_advantage']}x)")
+    scen = result["scenarios"]
+    print(f"scenario matrix at {scen['config']['budget_grad_evals']} grad "
+          "evals/chain: " + ", ".join(
+              f"{name} W2 {r['final_w2']:.4f}"
+              for name, r in scen["rows"].items()))
     print(f"wrote {args.out} (+ .timeline.json, .metrics.json)")
     if result["speedup_vs_sync"] <= 1.0:
         raise SystemExit("async-vs-sync speedup did not exceed 1")

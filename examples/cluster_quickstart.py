@@ -1,6 +1,7 @@
 """repro.cluster quickstart: a 32-chain async-SGLD ensemble on device.
 
     PYTHONPATH=src python examples/cluster_quickstart.py
+    PYTHONPATH=src python examples/cluster_quickstart.py --sampler svrg
 
 Each chain replays its own P-worker asynchronous execution (an executable
 ``WorkerSchedule`` compiled from the event-driven simulator); one jitted
@@ -14,7 +15,13 @@ pool re-simulated with ``batch_policy="inverse-speed"``, so slow workers
 amortize their staleness over large (bucket-snapped) minibatches while fast
 workers commit fresh small-batch gradients, and the executor scans masked
 bucket-padded windows of a data stream — one jit trace per ladder rung.
+
+``--sampler`` swaps the ensemble's chain for a zoo variant: ``svrg``
+(exact full gradient as the control-variate anchor — the quadratic makes
+it free) or ``sghmc`` (momentum buffer vmapped across all 32 chains).
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +32,11 @@ from repro.cluster import ClusterEngine, ensemble_async, w2_recorder
 from repro.core import Quadratic, WorkerModel
 
 CHAINS, WORKERS, COMMITS = 32, 8, 600
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--sampler", choices=("sgld", "svrg", "sghmc"),
+                default="sgld", help="zoo preset for the chain ensemble")
+args = ap.parse_args()
 
 quad = Quadratic.make(jax.random.PRNGKey(0), d=2, m=1.0, L=3.0)
 sigma = 0.5
@@ -37,8 +49,18 @@ schedules = ensemble_async(WorkerModel(num_workers=WORKERS, seed=0),
 tau = max(s.max_delay for s in schedules)
 print(f"{CHAINS} chains x {WORKERS} workers, realized max staleness {tau}")
 
-sampler = samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
-                        gamma=0.05, sigma=sigma, tau=tau)
+grad_fn = lambda p, b: quad.grad(p, b)  # noqa: E731
+if args.sampler == "svrg":
+    sampler = samplers.svrg("consistent", grad_fn,
+                            lambda p: quad.grad(p, None), anchor_every=64,
+                            gamma=0.05, sigma=sigma, tau=tau)
+elif args.sampler == "sghmc":
+    sampler = samplers.sghmc("consistent", grad_fn, gamma=0.05, sigma=sigma,
+                             friction=2.0, tau=tau)
+else:
+    sampler = samplers.sgld("consistent", grad_fn, gamma=0.05, sigma=sigma,
+                            tau=tau)
+print(f"sampler: {args.sampler}")
 w2 = w2_recorder(target, every=50)
 engine = ClusterEngine(sampler, num_chains=CHAINS, chunk_size=50, hooks=[w2])
 

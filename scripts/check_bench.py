@@ -15,7 +15,10 @@ Cluster gate (simulated, machine-independent — keep the bands tight):
 - W2-at-budget (``final_w2_async``) may not rise more than ``--tol-w2``
   above the baseline;
 - ``batch_policy.het_wallclock_advantage`` (inverse-speed batching reaching
-  the fixed-batch final W2 at equal grad evals) must stay > 1.
+  the fixed-batch final W2 at equal grad evals) must stay > 1;
+- every sampler-zoo scenario row the baseline records (``scenarios.rows``:
+  sgld / svrg / stale / sghmc / ar1) must still be present, non-NaN, and
+  its ``final_w2`` may not rise more than ``--tol-w2`` above the baseline.
 
 Serve gate (wall-clock, machine-dependent — the bands are wide because CI
 runners differ in absolute throughput; order-of-magnitude regressions, e.g.
@@ -91,6 +94,26 @@ def check_cluster(current: dict, baseline: dict, *, tol_speedup: float,
             failures.append(
                 "inverse-speed batching lost its wall-clock advantage at "
                 f"equal grad evals (het_wallclock_advantage {adv})")
+    scen0 = baseline.get("scenarios")
+    if scen0 is not None:
+        rows = current.get("scenarios", {}).get("rows", {})
+        for name, row0 in scen0["rows"].items():
+            row = rows.get(name)
+            if row is None:
+                failures.append(
+                    f"scenario {name!r}: row missing from the fresh "
+                    "benchmark (the zoo matrix must cover every baseline "
+                    "sampler)")
+                continue
+            w2, w20 = row["final_w2"], row0["final_w2"]
+            ceil = w20 * (1.0 + tol_w2)
+            if not w2 == w2:  # NaN guard: NaN compares false everywhere
+                failures.append(f"scenario {name!r}: final W2 is NaN")
+            elif w2 > ceil:
+                failures.append(
+                    f"scenario {name!r}: W2-at-budget regressed: "
+                    f"{w2:.4f} > {ceil:.4f} (baseline {w20:.4f}, "
+                    f"tolerance {tol_w2:.0%})")
     return failures
 
 
@@ -220,10 +243,19 @@ def _summary(current: dict, baseline: dict) -> str:
                          f"(baseline qps {b['qps']:.0f} "
                          f"p99 {b['p99_ms']:.2f}ms)")
         return "\n".join(parts)
-    return (f"speedup_vs_sync {current['speedup_vs_sync']:.3f} "
+    line = (f"speedup_vs_sync {current['speedup_vs_sync']:.3f} "
             f"(baseline {baseline['speedup_vs_sync']:.3f}), "
             f"final_w2_async {current['final_w2_async']:.4f} "
             f"(baseline {baseline['final_w2_async']:.4f})")
+    rows0 = baseline.get("scenarios", {}).get("rows", {})
+    rows = current.get("scenarios", {}).get("rows", {})
+    if rows0:
+        line += "\nscenarios: " + ", ".join(
+            f"{name} W2 "
+            f"{rows[name]['final_w2'] if name in rows else float('nan'):.4f}"
+            f" (baseline {rows0[name]['final_w2']:.4f})"
+            for name in sorted(rows0))
+    return line
 
 
 def _metrics_path(bench_path: str) -> str:

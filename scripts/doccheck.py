@@ -1,0 +1,119 @@
+"""Public-docstring gate over the repo's documented packages (stdlib AST,
+jaxlint-style: no imports of the checked code, exit 1 on findings).
+
+Every module, public top-level function/class, and public method in the
+target packages must carry a docstring — the docs tree (docs/SAMPLERS.md
+and friends) links into these docstrings, so a missing one is a doc hole,
+not a style nit.  Checked by default: ``repro.samplers``,
+``repro.cluster``, ``repro.obs``.
+
+Exemptions, mirroring what a reader never looks up:
+
+- names starting with ``_`` (and dunder methods except ``__call__``);
+- ``NamedTuple`` / dataclass field blocks (fields are documented in the
+  class docstring);
+- trivial delegating defs whose body is a single return/raise AND that
+  are nested inside a documented factory (the closure pattern the
+  sampler transforms use) — top-level defs never get this exemption;
+- ``@overload`` stubs and ``...``-bodied protocol methods.
+
+    python scripts/doccheck.py                # gate the default packages
+    python scripts/doccheck.py src/repro/obs  # gate specific trees
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+DEFAULT_TARGETS = ("src/repro/samplers", "src/repro/cluster",
+                   "src/repro/obs")
+
+
+def _has_docstring(node: ast.AST) -> bool:
+    return ast.get_docstring(node) is not None
+
+
+def _is_stub(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    """``...``-bodied and ``@overload`` defs carry no behavior to document."""
+    for deco in fn.decorator_list:
+        if isinstance(deco, ast.Name) and deco.id == "overload":
+            return True
+    body = fn.body
+    if _has_docstring(fn):
+        body = body[1:]
+    return (len(body) == 1
+            and isinstance(body[0], ast.Expr)
+            and isinstance(body[0].value, ast.Constant)
+            and body[0].value.value is Ellipsis)
+
+
+def _public_name(name: str) -> bool:
+    return not name.startswith("_") or name == "__call__"
+
+
+def check_module(path: pathlib.Path) -> list[str]:
+    """-> findings for one source file, ``path:line: message`` formatted."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    findings = []
+
+    def report(node, what, name):
+        findings.append(f"{path}:{node.lineno}: {what} `{name}` "
+                        "is public but has no docstring")
+
+    if not _has_docstring(tree) and any(
+            not isinstance(n, (ast.Import, ast.ImportFrom)) for n in tree.body):
+        findings.append(f"{path}:1: module has no docstring")
+
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if (_public_name(node.name) and not _has_docstring(node)
+                    and not _is_stub(node)):
+                report(node, "function", node.name)
+        elif isinstance(node, ast.ClassDef) and _public_name(node.name):
+            if not _has_docstring(node):
+                report(node, "class", node.name)
+            for sub in node.body:
+                if not isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    continue
+                if (_public_name(sub.name) and not _has_docstring(sub)
+                        and not _is_stub(sub)):
+                    report(sub, "method", f"{node.name}.{sub.name}")
+    return findings
+
+
+def check_tree(root: pathlib.Path) -> list[str]:
+    """-> findings across every ``*.py`` under ``root`` (or just ``root``
+    itself when it is a file)."""
+    paths = [root] if root.is_file() else sorted(root.rglob("*.py"))
+    findings = []
+    for path in paths:
+        findings.extend(check_module(path))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("targets", nargs="*", default=list(DEFAULT_TARGETS),
+                    help="package directories (or files) to gate")
+    args = ap.parse_args(argv)
+    findings = []
+    for target in args.targets:
+        root = pathlib.Path(target)
+        if not root.exists():
+            print(f"doccheck: no such path {target}", file=sys.stderr)
+            return 2
+        findings.extend(check_tree(root))
+    for f in findings:
+        print(f)
+    print(f"doccheck: {len(findings)} finding(s) over "
+          f"{', '.join(map(str, args.targets))}"
+          + ("" if findings else " — PASS"))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,105 @@
+"""Local markdown link gate over the docs tree (stdlib only, no network).
+
+Every inline ``[text](target)`` link in README.md, ANALYSIS.md, CHANGES.md,
+ROADMAP.md and ``docs/*.md`` is resolved relative to its source file:
+
+- ``path`` / ``path#anchor`` — the file must exist inside the repo; when
+  an anchor is given and the target is markdown, a matching heading must
+  exist (GitHub slugging: lowercase, spaces to ``-``, punctuation dropped);
+- ``#anchor`` — same-file heading check;
+- ``http(s)://`` / ``mailto:`` — skipped (this gate never touches the
+  network; external rot is not a CI failure).
+
+Fenced code blocks are masked first so ``](`` inside examples is ignored.
+
+    python scripts/linkcheck.py            # gate the default file set
+    python scripts/linkcheck.py docs/CI.md # gate specific files
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^```.*?^```\s*$", re.M | re.S)
+HEADING = re.compile(r"^#{1,6}\s+(.+?)\s*#*\s*$", re.M)
+_SLUG_DROP = re.compile(r"[^\w\- ]")
+
+
+def default_files() -> list[pathlib.Path]:
+    """README/ANALYSIS/CHANGES/ROADMAP plus every page under docs/."""
+    names = ["README.md", "ANALYSIS.md", "CHANGES.md", "ROADMAP.md"]
+    files = [ROOT / n for n in names if (ROOT / n).exists()]
+    return files + sorted((ROOT / "docs").glob("*.md"))
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip inline code/links, lowercase, drop
+    punctuation, spaces to hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = _SLUG_DROP.sub("", text.lower())
+    return text.strip().replace(" ", "-")
+
+
+def anchors(path: pathlib.Path) -> set[str]:
+    """Every heading slug in a markdown file (fences masked)."""
+    text = FENCE.sub("", path.read_text())
+    return {slugify(m.group(1)) for m in HEADING.finditer(text)}
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    """-> findings for one markdown file, ``path: message`` formatted."""
+    text = FENCE.sub(lambda m: "\n" * m.group(0).count("\n"), path.read_text())
+    findings = []
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        line = text[: m.start()].count("\n") + 1
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, anchor = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if ref:
+            if not dest.exists():
+                findings.append(f"{path}:{line}: broken link `{target}` "
+                                f"(no such file {ref})")
+                continue
+            if ROOT not in dest.parents and dest != ROOT:
+                findings.append(f"{path}:{line}: link `{target}` escapes "
+                                "the repo")
+                continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in anchors(dest):
+                findings.append(f"{path}:{line}: broken anchor `{target}` "
+                                f"(no heading slugs to `#{anchor}` "
+                                f"in {dest.name})")
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", help="markdown files to gate "
+                    "(default: README/ANALYSIS/CHANGES/ROADMAP + docs/*.md)")
+    args = ap.parse_args(argv)
+    files = ([pathlib.Path(f) for f in args.files] if args.files
+             else default_files())
+    findings = []
+    for path in files:
+        if not path.exists():
+            print(f"linkcheck: no such file {path}", file=sys.stderr)
+            return 2
+        findings.extend(check_file(path))
+    for f in findings:
+        print(f)
+    print(f"linkcheck: {len(findings)} finding(s) over {len(files)} file(s)"
+          + ("" if findings else " — PASS"))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

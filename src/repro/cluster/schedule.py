@@ -77,6 +77,8 @@ class WorkerSchedule:
 
     @property
     def max_delay(self) -> int:
+        """Largest realized staleness in the schedule (0 when empty) — the
+        floor on the ring depth any executor needs to replay it."""
         return int(self.delays.max(initial=0))
 
     @property
@@ -112,6 +114,8 @@ class WorkerSchedule:
 
     @classmethod
     def from_trace(cls, trace: DelayTrace) -> "WorkerSchedule":
+        """Build a schedule from a simulator :class:`DelayTrace`, turning
+        its per-commit delays back into absolute read versions."""
         k = np.arange(len(trace.delays), dtype=np.int64)
         return cls(read_versions=(k - trace.delays).astype(np.int32),
                    worker_ids=np.asarray(trace.worker_ids, np.int32),
@@ -122,6 +126,8 @@ class WorkerSchedule:
     @classmethod
     def from_delays(cls, delays: np.ndarray,
                     commit_times: np.ndarray | None = None) -> "WorkerSchedule":
+        """Single-worker schedule realizing the given per-commit delays;
+        commit times default to unit spacing when not supplied."""
         delays = np.asarray(delays, np.int64)
         k = np.arange(len(delays), dtype=np.int64)
         times = (np.arange(1, len(delays) + 1, dtype=np.float64)
@@ -140,6 +146,8 @@ class WorkerSchedule:
         check_staleness_fits(self.max_delay, depth, context or "schedule")
 
     def to_trace(self) -> DelayTrace:
+        """Inverse of :meth:`from_trace`: export the schedule as a
+        :class:`DelayTrace` for the simulator/diagnostics tooling."""
         return DelayTrace(delays=self.delays, commit_times=self.commit_times,
                           worker_ids=self.worker_ids,
                           num_workers=self.num_workers,

@@ -63,6 +63,8 @@ class ServeResult(NamedTuple):
 
     @property
     def std(self):
+        """Posterior-predictive standard deviation, ``sqrt(var)`` in
+        whichever array namespace ``var`` lives in."""
         if isinstance(self.var, np.ndarray):
             return np.sqrt(self.var)
         return jnp.sqrt(self.var)

@@ -57,15 +57,18 @@ class Counter:
         self._value = 0.0
 
     def inc(self, n: float = 1.0) -> None:
+        """Add ``n`` (must be >= 0 — counters only go up)."""
         if n < 0:
             raise ValueError(f"counter {self.name} cannot decrease (inc {n})")
         self._value += n
 
     @property
     def value(self) -> float:
+        """Current running total."""
         return self._value
 
     def to_dict(self) -> dict:
+        """JSON-ready ``{"type", "value"}`` form for snapshots."""
         return {"type": "counter", "value": self._value}
 
 
@@ -81,13 +84,16 @@ class Gauge:
         self._value = math.nan
 
     def set(self, v: float) -> None:
+        """Overwrite the gauge with ``v`` (last write wins)."""
         self._value = float(v)
 
     @property
     def value(self) -> float:
+        """Last value set (NaN before the first ``set``)."""
         return self._value
 
     def to_dict(self) -> dict:
+        """JSON-ready ``{"type", "value"}`` form for snapshots."""
         return {"type": "gauge", "value": self._value}
 
 
@@ -112,6 +118,7 @@ class Histogram:
         self.sum = 0.0
 
     def observe(self, v: float) -> None:
+        """Record one observation into its bucket (and total/sum)."""
         self.counts[bisect.bisect_left(self.bounds, v)] += 1
         self.total += 1
         self.sum += v
@@ -127,6 +134,7 @@ class Histogram:
 
     @property
     def mean(self) -> float:
+        """Exact mean of all observations (NaN when empty)."""
         return self.sum / self.total if self.total else math.nan
 
     def quantile(self, q: float) -> float:
@@ -144,6 +152,7 @@ class Histogram:
         return math.inf
 
     def to_dict(self) -> dict:
+        """JSON-ready bucket layout: bounds, counts, count, sum."""
         return {"type": "histogram", "bounds": list(self.bounds),
                 "counts": list(self.counts), "count": self.total,
                 "sum": self.sum}
@@ -181,21 +190,27 @@ class Registry:
             return m
 
     def counter(self, name: str, help: str = "") -> Counter:  # noqa: A002
+        """Get-or-create the :class:`Counter` registered under ``name``."""
         return self._get(name, "counter", lambda: Counter(name, help))
 
     def gauge(self, name: str, help: str = "") -> Gauge:  # noqa: A002
+        """Get-or-create the :class:`Gauge` registered under ``name``."""
         return self._get(name, "gauge", lambda: Gauge(name, help))
 
     def histogram(self, name: str, bounds: Optional[Sequence[float]] = None,
                   help: str = "") -> Histogram:  # noqa: A002
+        """Get-or-create the :class:`Histogram` under ``name``; ``bounds``
+        default to the latency-ms buckets and only apply on creation."""
         return self._get(name, "histogram",
                          lambda: Histogram(name, bounds or LATENCY_MS_BUCKETS,
                                            help))
 
     def get(self, name: str):
+        """The metric registered under ``name``, or None."""
         return self._metrics.get(name)
 
     def names(self) -> list:
+        """Sorted list of every registered metric name."""
         with self._lock:
             return sorted(self._metrics)
 
@@ -213,6 +228,7 @@ class Registry:
         return out
 
     def write_snapshot(self, path) -> dict:
+        """Dump :meth:`snapshot` to ``path`` as pretty JSON; returns it."""
         snap = self.snapshot()
         with open(path, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)

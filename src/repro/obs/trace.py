@@ -64,9 +64,11 @@ class Span:
 
     @property
     def duration(self) -> float:
+        """Wall seconds from entry to exit (0 while still open)."""
         return self.t1 - self.t0
 
     def to_dict(self) -> dict:
+        """JSON-ready form: name, ids, timestamps, thread, attrs."""
         return {"name": self.name, "id": self.span_id,
                 "parent": self.parent_id, "t0": self.t0, "t1": self.t1,
                 "tid": self.tid, "attrs": dict(self.attrs)}
@@ -145,10 +147,12 @@ class Tracer:
         return stack
 
     def enable(self) -> "Tracer":
+        """Start recording spans; returns self for chaining."""
         self.enabled = True
         return self
 
     def disable(self) -> "Tracer":
+        """Stop recording (``span()`` hands out no-op spans); returns self."""
         self.enabled = False
         return self
 
@@ -176,6 +180,7 @@ class Tracer:
 
     @property
     def spans(self) -> list:
+        """Snapshot copy of every recorded span, in completion order."""
         with self._lock:
             return list(self._spans)
 
@@ -186,10 +191,12 @@ class Tracer:
         return out
 
     def clear(self) -> None:
+        """Drop every recorded span without returning them."""
         with self._lock:
             self._spans.clear()
 
     def to_dicts(self) -> list:
+        """:meth:`Span.to_dict` over :attr:`spans` (JSON-ready list)."""
         return [sp.to_dict() for sp in self.spans]
 
 
@@ -209,10 +216,12 @@ def span(name: str, **attrs):
 
 
 def enable() -> Tracer:
+    """Turn on the process-global tracer; returns it."""
     return _GLOBAL.enable()
 
 
 def disable() -> Tracer:
+    """Turn off the process-global tracer; returns it."""
     return _GLOBAL.disable()
 
 

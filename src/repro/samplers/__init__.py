@@ -1,11 +1,14 @@
-"""Composable sampler-transform API for delayed-gradient SGLD.
+"""Composable sampler-transform API for the delayed-gradient sampler zoo.
 
 Optax-style ``(init, update)`` primitives — :func:`delay_read`,
-:func:`gradients`, :func:`langevin_noise`, :func:`apply_sgld_update`,
+:func:`gradients`, :func:`svrg_gradients`, :func:`stale_correction`,
+:func:`langevin_noise`, :func:`apply_sgld_update`, :func:`sghmc_update`,
 :func:`fused_update`, :func:`pipeline_overlap` — a :func:`chain`
-combinator, :class:`DelayPolicy` implementations, and the :func:`sgld`
-presets reproducing the paper's four read models.  The unified training
-driver over these samplers is :class:`repro.train.engine.Engine`.
+combinator, :class:`DelayPolicy` implementations, and the :func:`sgld` /
+:func:`svrg` / :func:`sghmc` presets reproducing the paper's four read
+models across the zoo.  The unified training driver over these samplers is
+:class:`repro.train.engine.Engine`; the equation-to-transform map lives in
+``docs/THEORY.md`` and the transform catalog in ``docs/SAMPLERS.md``.
 """
 
 from repro.samplers.base import Sampler, SamplerState  # noqa: F401
@@ -15,7 +18,13 @@ from repro.samplers.policies import (  # noqa: F401
     PerCoordinateDelay,
     TraceDelay,
 )
-from repro.samplers.presets import MODES, from_config, sgld  # noqa: F401
+from repro.samplers.presets import (  # noqa: F401
+    MODES,
+    from_config,
+    sghmc,
+    sgld,
+    svrg,
+)
 from repro.samplers.transform import (  # noqa: F401
     SamplerTransform,
     StepContext,
@@ -24,6 +33,7 @@ from repro.samplers.transform import (  # noqa: F401
 )
 from repro.samplers.transforms import (  # noqa: F401
     MaskedBatch,
+    SVRGState,
     apply_sgld_update,
     batch_mask,
     batch_scaled_gamma,
@@ -35,5 +45,8 @@ from repro.samplers.transforms import (  # noqa: F401
     masked_mean,
     noise_like,
     pipeline_overlap,
+    sghmc_update,
     sgld_apply,
+    stale_correction,
+    svrg_gradients,
 )

@@ -39,12 +39,16 @@ class Sampler:
     gamma: float | Schedule = 1e-2
 
     def gamma_at(self, step: jnp.ndarray) -> jnp.ndarray:
+        """Step size at commit ``step``: the schedule evaluated there, or
+        the constant ``gamma`` as a float32 scalar."""
         if callable(self.gamma):
             return self.gamma(step)
         return jnp.asarray(self.gamma, jnp.float32)
 
     # -- init ---------------------------------------------------------------
     def init(self, params: PyTree, key: jax.Array) -> SamplerState:
+        """Fresh state at ``params``: step 0, the carried chain ``key``,
+        and every transform's ``init`` state in ``inner`` (chain order)."""
         return SamplerState(params=params, step=jnp.int32(0), key=key,
                             inner=self.transform.init(params))
 

@@ -55,6 +55,7 @@ class ConstantDelay:
     tau: int
 
     def read(self, ctx: StepContext, ring: RingBuffer) -> PyTree:
+        """Whole-vector read ``X_{k - min(k, tau)}`` from the ring."""
         return read_consistent(ring, jnp.minimum(ctx.step, self.tau))
 
 
@@ -65,6 +66,7 @@ class TraceDelay:
     tau: int
 
     def read(self, ctx: StepContext, ring: RingBuffer) -> PyTree:
+        """Whole-vector read ``X_{k - ctx.delay}`` from the ring."""
         return read_consistent(ring, ctx.delay)
 
 
@@ -77,6 +79,9 @@ class PerCoordinateDelay:
     interpret: bool = True
 
     def read(self, ctx: StepContext, ring: RingBuffer) -> PyTree:
+        """Per-coordinate read: sample each coordinate's staleness in
+        ``[0, ctx.delay]`` from ``ctx.key_delay`` and gather it from the
+        ring (through the Pallas ``delay_gather`` kernel when ``fused``)."""
         delays = sample_coordinate_delays(ctx.key_delay, ring, ctx.delay)
         if self.fused:
             return fused_delay_gather(ring.history, delays, ring.head,

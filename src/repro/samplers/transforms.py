@@ -191,6 +191,208 @@ def fused_update(sigma: float, *, interpret: bool = True) -> SamplerTransform:
     return stateless(update)
 
 
+def _oracle_grads(grad_fn: GradFn, params: PyTree, batch: Any,
+                  has_aux: bool):
+    """Evaluate ``grad_fn`` at ``params`` under either batch contract:
+    a plain batch calls the oracle once; a :class:`MaskedBatch` vmaps the
+    *per-example* oracle over the padded bucket axis and masked-mean
+    reduces, exactly as :func:`masked_gradients` does.  Returns
+    ``(grads, aux)`` (aux ``None`` without ``has_aux``)."""
+    if isinstance(batch, MaskedBatch):
+        out = jax.vmap(lambda e: grad_fn(params, e))(batch.data)
+        per_grads, per_aux = out if has_aux else (out, None)
+        grads = masked_mean(per_grads, batch.size)
+        aux = masked_mean(per_aux, batch.size) if has_aux else None
+        return grads, aux
+    out = grad_fn(params, batch)
+    return out if has_aux else (out, None)
+
+
+class SVRGState(NamedTuple):
+    """Carry of :func:`svrg_gradients`: the control-variate anchor.
+
+    ``anchor`` is the snapshot :math:`\\tilde X` the correction is centered
+    on (same pytree structure as the params) and ``anchor_grad`` the full
+    gradient :math:`\\mu = \\nabla U(\\tilde X)` evaluated at it.  Both live
+    in the sampler's scanned carry, so an anchor refresh is a ``lax.cond``
+    inside the jitted chunk — epochs never retrace.
+    """
+
+    anchor: PyTree       # pytree like params
+    anchor_grad: PyTree  # pytree like params
+
+
+def svrg_gradients(grad_fn: GradFn, full_grad_fn: Callable[[PyTree], PyTree],
+                   *, anchor_every: int, has_aux: bool = False
+                   ) -> SamplerTransform:
+    """SVRG-Langevin gradient oracle: minibatch gradient with a
+    control-variate correction against a periodically refreshed full-data
+    anchor (Dubey et al.; stale-gradient variance analysis in Chen et al.).
+
+    The committed gradient is
+
+    ``g_k = grad_fn(x_hat_k, B_k) - grad_fn(anchor, B_k) + full_grad_fn(anchor)``
+
+    — unbiased for the full gradient at the read point ``x_hat_k``, with the
+    minibatch variance shrinking as the iterate approaches the anchor.  The
+    anchor ``(params, full gradient)`` pair is transform state, i.e. part of
+    the scanned carry: every ``anchor_every`` commits a ``lax.cond`` branch
+    re-anchors at the *current* iterate and pays one full-gradient
+    evaluation, so refreshes happen inside the jitted scan and never
+    retrace, regardless of how the driver chunks the step loop.
+
+    ``grad_fn`` follows the surrounding batch contract: called directly on a
+    plain batch, vmapped per example and masked-mean reduced on a
+    :class:`MaskedBatch` (the heterogeneous bucket-padded executor path).
+    ``full_grad_fn(params)`` must close over the full dataset and return a
+    gradient pytree.  ``aux`` (under ``has_aux``) comes from the read-point
+    minibatch term only.
+    """
+    if anchor_every < 1:
+        raise ValueError(f"anchor_every must be >= 1, got {anchor_every}")
+
+    def init(params):
+        # the zero anchor_grad is never read: step 0 satisfies
+        # step % anchor_every == 0, so the first commit re-anchors first.
+        # the anchor is a fresh copy — aliasing the live params buffer
+        # would make the engines' donated carry donate it twice.
+        return SVRGState(anchor=jax.tree_util.tree_map(jnp.array, params),
+                         anchor_grad=tree_zeros_like(params))
+
+    def update(ctx: StepContext, state: SVRGState):
+        def refresh(_):
+            return SVRGState(anchor=ctx.params,
+                             anchor_grad=full_grad_fn(ctx.params))
+
+        state = jax.lax.cond(ctx.step % anchor_every == 0, refresh,
+                             lambda s: s, state)
+        grads, aux = _oracle_grads(grad_fn, ctx.x_hat, ctx.batch, has_aux)
+        anchor_grads, _ = _oracle_grads(grad_fn, state.anchor, ctx.batch,
+                                        has_aux)
+        corrected = jax.tree_util.tree_map(
+            lambda g, ga, mu: g - ga + mu.astype(g.dtype),
+            grads, anchor_grads, state.anchor_grad)
+        return ctx._replace(grads=corrected, aux=aux), state
+
+    return SamplerTransform(init, update)
+
+
+def stale_correction(strength: float = 1.0,
+                     gamma_scale: float = 0.0) -> SamplerTransform:
+    """Stale-gradient compensation for delayed reads (Chen et al.,
+    *Stochastic Gradient MCMC with Stale Gradients*).
+
+    Chen et al. show the bias and MSE of stale-gradient SG-MCMC grow with
+    the staleness ``tau_k`` while the estimation variance does not, and that
+    staleness-aware step-size selection recovers the fresh-gradient
+    convergence rate.  This transform applies both halves, reading the
+    *endogenous* staleness the executor derives from its
+    :class:`~repro.cluster.schedule.WorkerSchedule`
+    (``version - read_version``, surfaced as ``ctx.delay``):
+
+    - **gradient term** — a first-order Taylor compensation of the stale
+      gradient toward the fresh read point, with the Hessian approximated
+      by the diagonal empirical Fisher (outer product of the gradient with
+      itself): ``g <- g + strength * g * g * (X_k - X_hat_k)``;
+    - **step-size term** — ``gamma <- gamma / (1 + gamma_scale * tau_k)``,
+      the staleness-aware schedule shrink (``gamma_scale=0`` disables it).
+
+    Both terms are selected per commit on ``tau_k > 0``, so a fresh read
+    (``tau_k = 0``) commits **bitwise-identically** to the uncorrected
+    chain (pinned in ``tests/test_zoo.py``).  Compose it directly after the
+    gradient stage; it is contract-agnostic (plain or masked batches) since
+    it only rewrites ``ctx.grads`` / ``ctx.gamma``.
+    """
+
+    def update(ctx: StepContext) -> StepContext:
+        if ctx.grads is None:
+            raise ValueError("stale_correction needs a gradients() stage "
+                             "first")
+        is_stale = ctx.delay > 0
+        corrected = jax.tree_util.tree_map(
+            lambda g, x, xh: jnp.where(
+                is_stale,
+                g + jnp.asarray(strength, g.dtype) * g * g
+                * (x - xh).astype(g.dtype),
+                g),
+            ctx.grads, ctx.params, ctx.x_hat)
+        gamma = ctx.gamma / (1.0 + jnp.asarray(gamma_scale, jnp.float32)
+                             * jnp.where(is_stale,
+                                         ctx.delay.astype(jnp.float32), 0.0))
+        return ctx._replace(grads=corrected, gamma=gamma)
+
+    return stateless(update)
+
+
+def sghmc_update(sigma: float, *, friction: float = 1.0,
+                 precond: Any = None,
+                 noise_dtype=jnp.float32) -> SamplerTransform:
+    """Commit one SGHMC step: momentum buffer + friction + injected noise
+    (the non-log-concave workhorse motivated by Zou, Xu & Gu's faster
+    SGLD-family rates; momentum state rides the sampler carry and
+    checkpoint-round-trips with it).
+
+    The underdamped Langevin SDE ``dX = V dt``, ``dV = -grad U dt
+    - a V dt + sqrt(2 a sigma) dW`` discretized Euler-style at step size
+    ``gamma_k`` (Chen, Fox & Guestrin 2014):
+
+    ``V_{k+1} = (1 - gamma_k a) V_k - gamma_k P grad + sqrt(2 a sigma
+    gamma_k) sqrt(P) G_k``;  ``X_{k+1} = X_k + gamma_k V_{k+1}``
+
+    where ``a = friction`` and ``P = precond`` is an optional diagonal
+    (inverse-mass) preconditioner — a scalar or a pytree shaped like the
+    params (the practical variant that drops the ``Gamma`` correction
+    term).  Replaces the ``langevin_noise() + apply_sgld_update()`` pair;
+    the gradient is whatever the upstream stages left in ``ctx.grads``, so
+    it composes with :func:`delay_read`, :func:`svrg_gradients`, and
+    :func:`stale_correction` unchanged.
+    """
+    if friction <= 0.0:
+        raise ValueError(f"friction must be > 0, got {friction}")
+
+    def init(params):
+        return tree_zeros_like(params)  # momentum buffer V_0 = 0
+
+    def precond_tree(params):
+        """Normalize ``precond`` to one diagonal factor per leaf.  A None
+        is the identity, a scalar broadcasts to every leaf, and a
+        params-shaped pytree is taken leafwise (scalars are detected by
+        value, not treedef — a bare float has the same single-leaf treedef
+        as single-array params)."""
+        if precond is None:
+            return jax.tree_util.tree_map(
+                lambda p: jnp.asarray(1.0, p.dtype), params)
+        if (not isinstance(precond, (list, tuple, dict))
+                and jnp.ndim(precond) == 0):
+            return jax.tree_util.tree_map(
+                lambda p: jnp.asarray(precond, p.dtype), params)
+        return jax.tree_util.tree_map(
+            lambda p, f: jnp.asarray(f, p.dtype), params, precond)
+
+    def update(ctx: StepContext, momentum):
+        if ctx.grads is None:
+            raise ValueError("sghmc_update needs a gradients() stage first")
+        scale = jnp.sqrt(2.0 * friction * sigma * ctx.gamma)
+        noise = noise_like(ctx.key_noise, ctx.params, scale, noise_dtype)
+
+        def step_v(v, g, n, p):
+            decay = (1.0 - ctx.gamma * friction).astype(v.dtype)
+            return (decay * v
+                    - ctx.gamma.astype(v.dtype) * p.astype(v.dtype)
+                    * g.astype(v.dtype)
+                    + jnp.sqrt(p).astype(v.dtype) * n.astype(v.dtype))
+
+        momentum = jax.tree_util.tree_map(step_v, momentum, ctx.grads,
+                                          noise, precond_tree(ctx.params))
+        params = jax.tree_util.tree_map(
+            lambda x, v: (x + ctx.gamma.astype(x.dtype)
+                          * v.astype(x.dtype)).astype(x.dtype),
+            ctx.params, momentum)
+        return ctx._replace(params=params, noise=noise), momentum
+
+    return SamplerTransform(init, update)
+
+
 def pipeline_overlap() -> SamplerTransform:
     """Swap this step's gradient for the previous one (tau=1 on the gradient
     sequence).  The fresh gradient's all-reduce has no consumer this step,

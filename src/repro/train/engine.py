@@ -200,6 +200,12 @@ class Engine:
     of keys on device); pass ``batches=`` to ``run`` instead for
     pre-generated data.  ``chunk_size`` trades host control granularity
     (hooks, logging) against dispatch overhead.
+
+    Transform state (the SVRG anchor, the SGHMC momentum buffer, delay
+    rings) lives in ``state.inner`` and is threaded through the scanned,
+    donated carry — so chunk boundaries are invisible to the samplers:
+    an anchor refresh scheduled mid-chunk or across a boundary produces
+    bit-identical trajectories either way (pinned by ``tests/test_zoo.py``).
     """
 
     sampler: Sampler

@@ -1,0 +1,263 @@
+"""Sampler-zoo edge cases: SVRG anchor refresh across chunk boundaries
+(bitwise vs unchunked), stale_correction reducing to plain SGLD at
+staleness 0 (bitwise), SGHMC momentum surviving a checkpoint round-trip,
+and AR(1) stream reproducibility from a seed."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import samplers
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core import Quadratic, constant_delays
+from repro.data import ar1_stream
+from repro.train import Engine
+
+GAMMA = 0.01
+SIGMA = 0.5
+STEPS = 60
+TAU = 3
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return Quadratic.make(jax.random.PRNGKey(0), d=4, m=1.0, L=3.0)
+
+
+def _grad_fns(quad, noise_scale=0.5):
+    """Minibatch oracle with additive data noise + matching full-data
+    gradient (data mean 0), so SVRG's control variate has something real
+    to cancel."""
+    grad = lambda p, b: quad.grad(p, None) + noise_scale * jnp.mean(  # noqa: E731
+        b, axis=0)
+    full_grad = lambda p: quad.grad(p, None)  # noqa: E731
+    return grad, full_grad
+
+
+def _batches(steps, d, seed=5):
+    return jax.random.normal(jax.random.PRNGKey(seed), (steps, 8, d))
+
+
+# -- SVRG ---------------------------------------------------------------------
+
+def test_svrg_anchor_refresh_across_chunks_bitwise(quad):
+    """Anchor refreshes landing mid-chunk and across chunk boundaries must
+    be invisible: the anchor lives in the scanned carry, so an Engine run
+    with a chunk size coprime to anchor_every matches the single-scan
+    Sampler.run trajectory bit for bit."""
+    grad, full_grad = _grad_fns(quad)
+    delays = jnp.asarray(constant_delays(TAU, STEPS).delays)
+    batches = _batches(STEPS, quad.d)
+
+    def make():
+        return samplers.svrg("consistent", grad, full_grad, anchor_every=16,
+                             gamma=GAMMA, sigma=SIGMA, tau=TAU)
+
+    s = make()
+    st = s.init(jnp.zeros(quad.d), jax.random.PRNGKey(1))
+    _, traj_ref = jax.jit(lambda st: s.run(st, batches, delays))(st)
+
+    # chunk_size=7 never divides anchor_every=16: refreshes at steps 16,
+    # 32, 48 land inside chunks 3, 5 and on the boundary of chunk 7
+    s2 = make()
+    engine = Engine(s2, chunk_size=7, collect_aux=False)
+    st2 = s2.init(jnp.zeros(quad.d), jax.random.PRNGKey(1))
+    fin, _ = engine.run(st2, steps=STEPS, batches=batches,
+                        delays=np.asarray(delays))
+    _, traj_chunked = jax.jit(lambda st: s2.run(st, batches, delays))(
+        s2.init(jnp.zeros(quad.d), jax.random.PRNGKey(1)))
+
+    np.testing.assert_array_equal(np.asarray(traj_ref),
+                                  np.asarray(traj_chunked))
+    # and the chunked engine's final params equal the scan's final params
+    ref_fin, _ = jax.jit(lambda st: s.run(st, batches, delays))(
+        s.init(jnp.zeros(quad.d), jax.random.PRNGKey(1)))
+    np.testing.assert_array_equal(np.asarray(ref_fin.params),
+                                  np.asarray(fin.params))
+
+
+def test_svrg_reduces_gradient_variance(quad):
+    """With additive data noise, the control variate cancels the noise term
+    exactly: the SVRG trajectory between refreshes equals noise-free SGLD's
+    whenever the anchor is fresh enough that mu ~= g(x_anchor)."""
+    noise_scale = 0.5
+    grad, full_grad = _grad_fns(quad, noise_scale)
+    batches = _batches(STEPS, quad.d)
+    # anchor_every=1: refresh every step => corrected grad == full gradient
+    s = samplers.svrg("sync", grad, full_grad, anchor_every=1,
+                      gamma=GAMMA, sigma=SIGMA)
+    st = s.init(jnp.zeros(quad.d), jax.random.PRNGKey(1))
+    _, traj = jax.jit(lambda st: s.run(st, batches))(st)
+
+    clean = samplers.sgld("sync", lambda p, b: quad.grad(p, None),
+                          gamma=GAMMA, sigma=SIGMA)
+    stc = clean.init(jnp.zeros(quad.d), jax.random.PRNGKey(1))
+    _, traj_clean = jax.jit(lambda st: clean.run(st, batches))(stc)
+    np.testing.assert_allclose(np.asarray(traj), np.asarray(traj_clean),
+                               atol=1e-6)
+
+
+def test_svrg_validates_anchor_every(quad):
+    grad, full_grad = _grad_fns(quad)
+    with pytest.raises(ValueError, match="anchor_every"):
+        samplers.svrg_gradients(grad, full_grad, anchor_every=0)
+
+
+# -- stale correction ---------------------------------------------------------
+
+def test_stale_correction_noop_at_zero_staleness_bitwise(quad):
+    """At staleness 0 every commit takes the uncorrected branch and the
+    step shrink divides by exactly 1.0 — the corrected sampler must be
+    bitwise-identical to the plain SGLD preset (the acceptance pin)."""
+    grad = lambda p, b: quad.grad(p, None)  # noqa: E731
+    batches = _batches(STEPS, quad.d)
+    plain = samplers.sgld("sync", grad, gamma=GAMMA, sigma=SIGMA)
+    corrected = samplers.sgld("sync", grad, gamma=GAMMA, sigma=SIGMA,
+                              stale_strength=1.0, stale_gamma_scale=0.5)
+    sp = plain.init(jnp.zeros(quad.d), jax.random.PRNGKey(2))
+    sc = corrected.init(jnp.zeros(quad.d), jax.random.PRNGKey(2))
+    _, tp = jax.jit(lambda s: plain.run(s, batches))(sp)
+    _, tc = jax.jit(lambda s: corrected.run(s, batches))(sc)
+    np.testing.assert_array_equal(np.asarray(tp), np.asarray(tc))
+
+
+def test_stale_correction_noop_at_zero_delay_trace_bitwise(quad):
+    """Same pin through the delayed-read path: a consistent-mode run whose
+    realized delays are all zero must also match plain SGLD bitwise."""
+    grad = lambda p, b: quad.grad(p, None)  # noqa: E731
+    batches = _batches(STEPS, quad.d)
+    zero_delays = jnp.zeros(STEPS, jnp.int32)
+    plain = samplers.sgld("consistent", grad, gamma=GAMMA, sigma=SIGMA, tau=2)
+    corrected = samplers.sgld("consistent", grad, gamma=GAMMA, sigma=SIGMA,
+                              tau=2, stale_strength=1.0,
+                              stale_gamma_scale=0.5)
+    sp = plain.init(jnp.zeros(quad.d), jax.random.PRNGKey(2))
+    sc = corrected.init(jnp.zeros(quad.d), jax.random.PRNGKey(2))
+    _, tp = jax.jit(lambda s: plain.run(s, batches, zero_delays))(sp)
+    _, tc = jax.jit(lambda s: corrected.run(s, batches, zero_delays))(sc)
+    np.testing.assert_array_equal(np.asarray(tp), np.asarray(tc))
+
+
+def test_stale_correction_changes_stale_commits(quad):
+    grad = lambda p, b: quad.grad(p, None)  # noqa: E731
+    batches = _batches(STEPS, quad.d)
+    delays = jnp.asarray(constant_delays(TAU, STEPS).delays)
+    plain = samplers.sgld("consistent", grad, gamma=GAMMA, sigma=SIGMA,
+                          tau=TAU)
+    corrected = samplers.sgld("consistent", grad, gamma=GAMMA, sigma=SIGMA,
+                              tau=TAU, stale_strength=1.0)
+    x0 = jnp.ones(quad.d)
+    sp = plain.init(x0, jax.random.PRNGKey(2))
+    sc = corrected.init(x0, jax.random.PRNGKey(2))
+    _, tp = jax.jit(lambda s: plain.run(s, batches, delays))(sp)
+    _, tc = jax.jit(lambda s: corrected.run(s, batches, delays))(sc)
+    assert not np.array_equal(np.asarray(tp), np.asarray(tc))
+
+
+def test_stale_correction_requires_gradients():
+    s = samplers.Sampler(
+        transform=samplers.chain(samplers.stale_correction()), gamma=GAMMA)
+    st = s.init(jnp.zeros(2), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="gradients"):
+        s.step(st, jnp.zeros((1,)))
+
+
+# -- SGHMC --------------------------------------------------------------------
+
+def test_sghmc_momentum_survives_checkpoint_roundtrip(quad, tmp_path):
+    """Splitting an SGHMC run at an arbitrary step through a save/restore
+    of the full sampler state (momentum included) must reproduce the
+    uninterrupted trajectory bitwise."""
+    grad = lambda p, b: quad.grad(p, None)  # noqa: E731
+    batches = _batches(STEPS, quad.d)
+    delays = jnp.asarray(constant_delays(TAU, STEPS).delays)
+    s = samplers.sghmc("consistent", grad, gamma=GAMMA, sigma=SIGMA,
+                       friction=2.0, tau=TAU)
+    st = s.init(jnp.ones(quad.d), jax.random.PRNGKey(3))
+    _, traj_ref = jax.jit(lambda st: s.run(st, batches, delays))(st)
+
+    cut = 23  # not chunk- or anything-aligned
+    st2 = s.init(jnp.ones(quad.d), jax.random.PRNGKey(3))
+    mid, traj_a = jax.jit(lambda st: s.run(st, batches[:cut], delays[:cut]))(
+        st2)
+    path = str(tmp_path / "sghmc_state")
+    save_checkpoint(path, mid, step=cut)
+    restored = restore_checkpoint(path, like=mid)
+    # the momentum buffer is inside state.inner; a lossy round-trip would
+    # show up as a trajectory split brighter than float exactness
+    fin, traj_b = jax.jit(lambda st: s.run(st, batches[cut:], delays[cut:]))(
+        restored)
+    stitched = np.concatenate([np.asarray(traj_a), np.asarray(traj_b)])
+    np.testing.assert_array_equal(stitched, np.asarray(traj_ref))
+
+
+def test_sghmc_momentum_state_shape(quad):
+    grad = lambda p, b: quad.grad(p, None)  # noqa: E731
+    s = samplers.sghmc("sync", grad, gamma=GAMMA, sigma=SIGMA)
+    st = s.init(jnp.zeros(quad.d), jax.random.PRNGKey(0))
+    # chain state is a tuple of member states; the momentum leaf is the
+    # params-shaped buffer of the final (sghmc_update) member
+    momentum = st.inner[-1]
+    assert momentum.shape == (quad.d,)
+    np.testing.assert_array_equal(np.asarray(momentum), 0.0)
+
+
+def test_sghmc_preconditioner_scales_updates(quad):
+    """A scalar preconditioner rescales the gradient drift; P=1 is the
+    identity and P=0.25 moves less far down the potential per step."""
+    grad = lambda p, b: quad.grad(p, None)  # noqa: E731
+    batches = _batches(STEPS, quad.d)
+    x0 = 3.0 * jnp.ones(quad.d)
+
+    def final_dist(precond):
+        s = samplers.sghmc("sync", grad, gamma=GAMMA, sigma=0.0,
+                           friction=2.0, precond=precond)
+        st = s.init(x0, jax.random.PRNGKey(4))
+        fin, _ = jax.jit(lambda st: s.run(st, batches))(st)
+        return float(jnp.linalg.norm(fin.params - quad.x_star))
+
+    assert final_dist(0.25) > final_dist(1.0)
+
+
+def test_sghmc_validates_friction(quad):
+    with pytest.raises(ValueError, match="friction"):
+        samplers.sghmc_update(SIGMA, friction=0.0)
+
+
+# -- AR(1) stream -------------------------------------------------------------
+
+def test_ar1_stream_reproducible_from_seed():
+    k = jax.random.PRNGKey(11)
+    a = ar1_stream(k, steps=50, batch=4, d=3, rho=0.8)
+    b = ar1_stream(k, steps=50, batch=4, d=3, rho=0.8)
+    assert a.shape == (50, 4, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = ar1_stream(jax.random.PRNGKey(12), steps=50, batch=4, d=3, rho=0.8)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_ar1_stream_dependence_and_marginal():
+    x = np.asarray(ar1_stream(jax.random.PRNGKey(0), steps=4000, batch=2,
+                              d=1, rho=0.9, mean=1.0, scale=2.0))
+    flat = x.reshape(4000, -1)
+    # stationary marginal keeps (mean, scale) regardless of rho
+    assert abs(flat.mean() - 1.0) < 0.25
+    assert abs(flat.std() - 2.0) < 0.25
+    corr = np.corrcoef(flat[:-1, 0], flat[1:, 0])[0, 1]
+    assert 0.8 < corr < 0.97
+
+
+def test_ar1_stream_rho_zero_is_iid_marginal():
+    x = np.asarray(ar1_stream(jax.random.PRNGKey(0), steps=2000, batch=2,
+                              d=1, rho=0.0))
+    flat = x.reshape(2000, -1)
+    corr = np.corrcoef(flat[:-1, 0], flat[1:, 0])[0, 1]
+    assert abs(corr) < 0.1
+
+
+def test_ar1_stream_validates_args():
+    with pytest.raises(ValueError, match="rho"):
+        ar1_stream(jax.random.PRNGKey(0), steps=4, batch=2, d=1, rho=1.0)
+    with pytest.raises(ValueError, match="steps"):
+        ar1_stream(jax.random.PRNGKey(0), steps=0, batch=2, d=1)
