@@ -41,7 +41,12 @@ absolute speed; the *structural* invariants below are exact):
   trace count is a program-structure invariant, not a timing), and
   ``retraced_in_stream`` / ``pad_allocs_in_stream`` must stay falsy;
 - sharded decode must stay sublinear in C (``sublinear.pass``) wherever the
-  baseline recorded it.
+  baseline recorded it;
+- wherever the baseline records a ``continuous`` block, continuous batching
+  must keep its sustained-QPS uplift over the convoyed static baseline
+  (uplift > 1, exact), hold the paged QPS floor / p99-TTFT ceiling inside
+  the same wall-clock bands, keep the paged trace count exact, and show
+  zero in-stream traces and zero host pad allocations on either server.
 
 The structural fields the exact gates read (``traces``,
 ``retraced_in_stream``, ``pad_allocs_in_stream``) are produced by the
@@ -200,6 +205,59 @@ def check_decode(current: dict, baseline: dict, *, tol_tps: float,
                 "sharded decode lost sublinearity in C: per-token cost "
                 f"{sub and sub.get('sharded_per_token_ms')}ms vs linear "
                 f"bound {sub and sub.get('linear_bound_ms')}ms")
+    if baseline.get("continuous") is not None:
+        failures.extend(_check_continuous(current.get("continuous"),
+                                          baseline["continuous"],
+                                          tol_tps=tol_tps, tol_p99=tol_p99))
+    return failures
+
+
+def _check_continuous(cont: dict | None, cont0: dict, *, tol_tps: float,
+                      tol_p99: float) -> list[str]:
+    """Continuous-batching gate: the paged engine must keep its sustained-
+    QPS uplift over the convoyed static batch (exact pass flag), hold a QPS
+    floor and a p99-TTFT ceiling vs the baseline (wall-clock bands), and
+    keep the stream structurally clean — paged trace count exact, zero
+    in-stream traces, zero host pad allocations on either server."""
+    if cont is None:
+        failures = ["continuous: baseline records a continuous-batching "
+                    "block but the fresh benchmark has none"]
+        return failures
+    failures = []
+    paged, paged0 = cont["paged"], cont0["paged"]
+    if not cont.get("pass") or cont["qps_uplift"] <= 1.0:
+        failures.append(
+            f"continuous: batching lost its sustained-QPS uplift over the "
+            f"convoyed static batch: {cont['qps_uplift']}x <= 1 "
+            f"(baseline {cont0['qps_uplift']}x)")
+    floor = paged0["qps"] * (1.0 - tol_tps)
+    if paged["qps"] < floor:
+        failures.append(
+            f"continuous: paged QPS regressed: {paged['qps']:.2f} < "
+            f"{floor:.2f} (baseline {paged0['qps']:.2f}, "
+            f"tolerance {tol_tps:.0%})")
+    ceil = paged0["p99_ttft_ms"] * (1.0 + tol_p99)
+    if paged["p99_ttft_ms"] > ceil:
+        failures.append(
+            f"continuous: paged p99 TTFT regressed: "
+            f"{paged['p99_ttft_ms']:.1f}ms > {ceil:.1f}ms "
+            f"(baseline {paged0['p99_ttft_ms']:.1f}ms, "
+            f"tolerance {tol_p99:.0%})")
+    if paged["traces"] != paged0["traces"]:
+        failures.append(
+            f"continuous: paged trace count changed: {paged['traces']} != "
+            f"baseline {paged0['traces']} (one prefill trace per prompt "
+            "rung + one step trace is a program-structure invariant)")
+    if paged.get("new_traces_in_stream") or paged.get("retraced_in_stream"):
+        failures.append(
+            "continuous: paged engine retraced inside the arrival stream "
+            f"({paged.get('new_traces_in_stream')} new traces)")
+    for name, side in (("paged", paged), ("static", cont["static"])):
+        if side.get("pad_allocs_in_stream"):
+            failures.append(
+                f"continuous: {name} server allocated host pad scratch "
+                f"inside the arrival stream "
+                f"({side['pad_allocs_in_stream']} allocs)")
     return failures
 
 
@@ -231,6 +289,13 @@ def _summary(current: dict, baseline: dict) -> str:
             parts.append(f"chains={key[0]} shards={key[1]}: {got} "
                          f"(baseline tok/s {b['tokens_per_s']:.0f} "
                          f"traces {b['traces']})")
+        cont, cont0 = current.get("continuous"), baseline.get("continuous")
+        if cont0 is not None:
+            got = (f"uplift {cont['qps_uplift']}x, paged "
+                   f"{cont['paged']['qps']:.2f} qps" if cont else "MISSING")
+            parts.append(f"continuous: {got} (baseline uplift "
+                         f"{cont0['qps_uplift']}x, paged "
+                         f"{cont0['paged']['qps']:.2f} qps)")
         return "\n".join(parts)
     if "rows" in current:
         cur, base = _serve_rows(current), _serve_rows(baseline)

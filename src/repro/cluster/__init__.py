@@ -8,8 +8,20 @@ executor that shards chains over a mesh's ``data`` axis
 (:mod:`~repro.cluster.executor`), and the :class:`ServeEngine` that answers
 posterior-predictive queries straight from the sharded chain bank
 (:mod:`~repro.cluster.serve`).
+
+Serving has a request-level front door (:mod:`~repro.cluster.api`):
+:class:`Request`/:class:`Completion` + ``submit()``/``drain()`` shared by
+every engine, and :class:`PagedDecodeEngine`
+(:mod:`~repro.cluster.paged`) — continuous batching over a paged KV bank
+with slot-level admission.
 """
 
+from repro.cluster.api import (  # noqa: F401
+    BankEngine,
+    Completion,
+    Endpoint,
+    Request,
+)
 from repro.cluster.ensemble import (  # noqa: F401
     chain_positions,
     diagnostics_recorder,
@@ -23,6 +35,7 @@ from repro.cluster.ensemble import (  # noqa: F401
 )
 from repro.cluster.decode import DecodeEngine, DecodeResult  # noqa: F401
 from repro.cluster.executor import BATCH_POLICIES, ClusterEngine  # noqa: F401
+from repro.cluster.paged import PagedDecodeEngine, PageAllocator  # noqa: F401
 from repro.cluster.serve import (  # noqa: F401
     HostScratch,
     ServeEngine,

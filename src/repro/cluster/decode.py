@@ -17,7 +17,9 @@ system):
 - **KV-cache bank**: one per-chain decode cache per batch bucket rung,
   allocated once (``Model.init_cache_bank`` — every leaf gains the leading
   chain axis), donated to the jitted program and updated in place across
-  serve steps.  No per-request cache allocation.
+  serve steps.  No per-request cache allocation.  Rungs live in an LRU
+  (capped at ``max_cache_rungs``): an adversarial mix of batch sizes evicts
+  the coldest rung's bank instead of growing device memory without bound.
 - **One trace per (bucket, max_new_tokens)**: prompts are padded up the
   shared bucket ladder in both batch and length (numpy scratch, reused per
   rung), the true ``prompt_len`` rides along as a traced scalar, and the
@@ -38,10 +40,21 @@ system):
   models streams without gathering parameters anywhere.  Tensor-parallel
   contractions psum over shards, so this path trades the bitwise guarantee
   for HBM headroom; the chain-sharded ``shard_map`` path keeps it.
+
+Since PR 9 the engine is also a request-level
+:class:`~repro.cluster.api.Endpoint`: ``submit()`` enqueues individual
+prompt :class:`~repro.cluster.api.Request`\\ s and ``drain()`` stacks
+compatible ones (same prompt length, budget, and key) back through the
+bucketed batch program.  ``generate()`` is a thin shim over that path and
+stays bitwise-identical to the pre-PR-9 batch-level API (pinned in
+``tests/test_api.py``).  For slot-level continuous batching — admission
+the moment any sequence finishes — see
+:class:`~repro.cluster.paged.PagedDecodeEngine`.
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, NamedTuple, Optional, Sequence
 
@@ -51,13 +64,15 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.analysis.instrument import counters as _counters
-from repro.models.common import partition_tree
+from repro.cluster.api import (
+    FINISH_LENGTH,
+    BankEngine,
+    Completion,
+    Request,
+)
 from repro.obs.metrics import LATENCY_MS_BUCKETS, registry as _registry
 from repro.obs.trace import now as _now, span as _span
-from repro.models.predictive import bma_logits
-from repro.samplers.base import SamplerState
-from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
+from repro.utils import bucket_size
 
 PyTree = Any
 
@@ -73,7 +88,7 @@ class DecodeResult(NamedTuple):
 
 
 @dataclass
-class DecodeEngine:
+class DecodeEngine(BankEngine):
     """Streaming multi-token BMA generation over a chain-stacked bank.
 
     ``model`` is the :class:`~repro.models.transformer.Model` (or anything
@@ -83,6 +98,8 @@ class DecodeEngine:
     the prompt batch up the bucket ladder, prefills the rung's persistent
     KV-cache bank, and drives one scan-compiled decode loop; ``key=None``
     decodes greedily, a PRNG key samples from the BMA token law.
+    ``max_cache_rungs`` caps how many batch rungs keep a resident KV bank
+    (least-recently-used rung evicted beyond it).
     """
 
     model: Any
@@ -96,27 +113,20 @@ class DecodeEngine:
     fused: bool = False
     fused_interpret: Optional[bool] = None  # default: compiled only on TPU
     return_logits: bool = False
+    max_cache_rungs: int = 8
+
+    _FRONT_FIELD = "model"
 
     def __post_init__(self):
-        from repro.cluster.serve import HostScratch
         from repro.models.transformer import Model
 
-        leaves = jax.tree_util.tree_leaves(self.params)
-        if not leaves:
-            raise ValueError("params bank is empty")
-        self.num_chains = int(leaves[0].shape[0])
+        self._init_bank("DecodeEngine")
         cfg = self.model.cfg if hasattr(self.model, "cfg") else self.model
         self._model = Model(cfg, mesh=None, remat=False,
                             decode_fused=self.fused,
                             decode_interpret=self.fused_interpret)
         self._model._require_stacked_attention("DecodeEngine")
-        if self.buckets is not None:
-            self.buckets = sorted(int(b) for b in self.buckets)
-        if self.prompt_buckets is not None:
-            self.prompt_buckets = sorted(int(b) for b in self.prompt_buckets)
-        self._counters = _counters("DecodeEngine")
-        self._scratch = HostScratch(self._counters)
-        self._cache: dict = {}  # B rung -> persistent KV-cache bank
+        self._cache: OrderedDict = OrderedDict()  # B rung -> KV-cache bank
         reg = _registry()
         self._m_requests = reg.counter("decode.requests", "generate() calls")
         self._m_tokens = reg.counter("decode.tokens",
@@ -129,66 +139,28 @@ class DecodeEngine:
             "decode.batch_utilization", "last request's B / batch rung")
         self._m_bank_rungs = reg.gauge(
             "decode.bank_rungs", "KV-cache bank rungs resident")
-        if self.mesh is not None:
-            n_shards = self.mesh.shape[self.chain_axis]
-            if self.num_chains % n_shards:
-                raise ValueError(
-                    f"num_chains={self.num_chains} must be divisible by mesh "
-                    f"axis {self.chain_axis!r} (size {n_shards})")
-            self.params = jax.device_put(self.params, self._bank_shardings())
+        self._m_bank_evictions = reg.counter(
+            "decode.bank_evictions",
+            "KV-cache rungs dropped by the max_cache_rungs LRU cap")
+        self._shard_bank()
         self._run = jax.jit(self._core, static_argnums=(0, 1),
                             donate_argnums=(3,))
-
-    # -- sharding layout ------------------------------------------------------
-    def _bank_shardings(self):
-        """Per-leaf NamedShardings for the params bank: chain axis over
-        ``chain_axis``; with ``shard_params`` the single-chain tensor-
-        parallel specs (``partition_tree``) compose behind it (2-D)."""
-        if not self.shard_params:
-            s = NamedSharding(self.mesh, P(self.chain_axis))
-            return jax.tree_util.tree_map(lambda _: s, self.params)
-        cfg = self._model.cfg
-        like = jax.tree_util.tree_map(
-            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), self.params)
-        specs = partition_tree(like, cfg.param_sharding,
-                               model_size=self.mesh.shape.get("model"),
-                               cfg=cfg)
-        return jax.tree_util.tree_map(
-            lambda s: NamedSharding(self.mesh, P(self.chain_axis, *s)), specs,
-            is_leaf=lambda s: isinstance(s, P))
 
     # -- the traced program ---------------------------------------------------
     def _core(self, max_new: int, greedy: bool, params, cache, tokens,
               prompt_len, key):
         # python side effect: runs once per (rung, max_new) trace
         self._counters.trace("decode")
-        if self.mesh is None:
-            return self._stream(params, cache, tokens, prompt_len, key,
-                                max_new, greedy, reduce=bma_logits)
-        if self.shard_params:
-            rep = NamedSharding(self.mesh, P())
-
-            def reduce(per_chain):  # pin gather-then-reduce under GSPMD
-                gathered = jax.lax.with_sharding_constraint(per_chain, rep)
-                return bma_logits(gathered)
-
-            return self._stream(params, cache, tokens, prompt_len, key,
-                                max_new, greedy, reduce=reduce)
         ax = self.chain_axis
 
-        def body(params, cache, tokens, prompt_len, key):
-            def reduce(local):  # (C/shards, B, V) -> replicated (B, V)
-                full = jax.lax.all_gather(local, ax, axis=0, tiled=True)
-                return bma_logits(full)
-
+        def body(reduce, params, cache, tokens, prompt_len, key):
             return self._stream(params, cache, tokens, prompt_len, key,
                                 max_new, greedy, reduce=reduce)
 
-        return shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(ax), P(ax), P(), P(), P()),
-            out_specs=(P(), P(), P(ax)), **SHARD_MAP_CHECK_KW)(
-                params, cache, tokens, prompt_len, key)
+        return self._wrap_bma(
+            body, in_specs=(P(ax), P(ax), P(), P(), P()),
+            out_specs=(P(), P(), P(ax)))(params, cache, tokens, prompt_len,
+                                         key)
 
     def _stream(self, params, cache, tokens, prompt_len, key, max_new: int,
                 greedy: bool, *, reduce):
@@ -227,7 +199,7 @@ class DecodeEngine:
             logits_out = none
         return tokens_out, logits_out, cache
 
-    # -- serving --------------------------------------------------------------
+    # -- KV-cache bank (LRU over batch rungs) ---------------------------------
     def _rung_cache(self, b_rung: int):
         cache = self._cache.pop(b_rung, None)
         if cache is None:
@@ -238,33 +210,72 @@ class DecodeEngine:
                     cache, NamedSharding(self.mesh, P(self.chain_axis)))
         return cache
 
-    def generate(self, tokens, max_new_tokens: int,
-                 key: Optional[jax.Array] = None) -> DecodeResult:
-        """Stream ``max_new_tokens`` BMA tokens from a prompt batch.
+    def _store_rung_cache(self, b_rung: int, cache) -> None:
+        # pop-on-read + insert-on-write keeps the OrderedDict in recency
+        # order, so the front is always the least-recently-used rung
+        self._cache[b_rung] = cache
+        while len(self._cache) > self.max_cache_rungs:
+            self._cache.popitem(last=False)
+            self._m_bank_evictions.inc()
+        self._m_bank_rungs.set(float(len(self._cache)))
 
-        ``tokens`` is a host or device ``(B, T)`` int array (every prompt in
-        a request shares T, as in :class:`ServeEngine`'s batched queries);
-        mixed request streams bucket on both axes.  Greedy when ``key`` is
-        None, else each token is sampled from the BMA predictive law.
-        Returns host arrays trimmed to the true batch.
-        """
-        if max_new_tokens < 1:
-            raise ValueError(f"need max_new_tokens >= 1, got {max_new_tokens}")
-        tokens = np.asarray(tokens)
-        if tokens.ndim != 2:
-            raise ValueError(f"prompt batch must be (B, T), got {tokens.shape}")
-        B, T = tokens.shape
-        b_rung = bucket_size(B, self.buckets)
-        t_rung = bucket_size(T, self.prompt_buckets)
-        cfg = self._model.cfg
-        if not cfg.sliding_window and t_rung + max_new_tokens > self.max_seq:
+    # -- request-level endpoint -----------------------------------------------
+    def _validate_request(self, request: Request) -> None:
+        tokens = np.asarray(request.tokens)
+        if tokens.ndim != 1:
+            raise ValueError(
+                f"a decode Request carries one 1-D prompt, got shape "
+                f"{tokens.shape}")
+        if request.max_new_tokens < 1:
+            raise ValueError(
+                f"need max_new_tokens >= 1, got {request.max_new_tokens}")
+        t_rung = bucket_size(tokens.shape[0], self.prompt_buckets)
+        if not self._model.cfg.sliding_window and \
+                t_rung + request.max_new_tokens > self.max_seq:
             # under a sliding window the ring overwriting its oldest slot is
             # exactly the attention semantics; without one it would silently
             # drop real context from every remaining step
             raise ValueError(
-                f"prompt rung {t_rung} + max_new_tokens {max_new_tokens} "
-                f"overflows the {self.max_seq}-slot cache of a full-attention "
-                "model; raise max_seq")
+                f"prompt rung {t_rung} + max_new_tokens "
+                f"{request.max_new_tokens} overflows the {self.max_seq}-slot "
+                "cache of a full-attention model; raise max_seq")
+        request.tokens = tokens
+
+    def _drain(self, requests):
+        """Stack compatible pending prompts — same length, same budget, same
+        sampling key — into batched :meth:`_generate_batch` calls (in first-
+        submission order) and hand every request its row back as a
+        :class:`~repro.cluster.api.Completion`."""
+        groups: OrderedDict = OrderedDict()
+        for r in requests:
+            sig = (r.tokens.shape[0], int(r.max_new_tokens),
+                   id(r.key) if r.key is not None else None)
+            groups.setdefault(sig, []).append(r)
+        out = {}
+        for (_, max_new, _), rows in groups.items():
+            batch = np.stack([r.tokens for r in rows])
+            res = self._generate_batch(batch, max_new, rows[0].key)
+            t_done = _now()
+            for i, r in enumerate(rows):
+                # batch engines deliver whole generations at drain: the
+                # first token becomes host-visible when the batch does
+                r.timing["first_token"] = r.timing["finished"] = t_done
+                out[r.request_id] = Completion(
+                    request_id=r.request_id, tokens=res.tokens[i],
+                    logits=(res.logits[i] if res.logits is not None
+                            else None),
+                    finish_reason=FINISH_LENGTH, timing=r.timing)
+        return [out[r.request_id] for r in requests]
+
+    # -- serving --------------------------------------------------------------
+    def _generate_batch(self, tokens: np.ndarray, max_new_tokens: int,
+                        key: Optional[jax.Array]) -> DecodeResult:
+        """The batch-level program: pad one (B, T) prompt batch up its rung
+        pair, prefill the rung's persistent cache bank, run the scan-
+        compiled decode loop, trim on host."""
+        B, T = tokens.shape
+        b_rung = bucket_size(B, self.buckets)
+        t_rung = bucket_size(T, self.prompt_buckets)
         t_start = _now()
         with _span("decode.generate", B=B, T=T, b_rung=b_rung, t_rung=t_rung,
                    new_tokens=int(max_new_tokens), chains=self.num_chains):
@@ -279,51 +290,41 @@ class DecodeEngine:
             toks, logps, cache = self._run(
                 int(max_new_tokens), greedy, self.params, cache, buf,
                 np.asarray(T, np.int32), k)
-            self._cache[b_rung] = cache  # donated in, reused next request
+            self._store_rung_cache(b_rung, cache)  # donated in, reused next
             out = np.asarray(toks)[:B]  # blocks: the span sees real latency
         self._m_requests.inc()
         self._m_tokens.inc(B * int(max_new_tokens))
         self._m_token_ms.observe((_now() - t_start) * 1e3 / max_new_tokens)
         self._m_batch_util.set(B / b_rung)
-        self._m_bank_rungs.set(float(len(self._cache)))
         return DecodeResult(
             tokens=out,
             logits=np.asarray(logps)[:B] if self.return_logits else None)
 
+    def generate(self, tokens, max_new_tokens: int,
+                 key: Optional[jax.Array] = None) -> DecodeResult:
+        """Stream ``max_new_tokens`` BMA tokens from a prompt batch.
+
+        ``tokens`` is a host or device ``(B, T)`` int array (every prompt in
+        a request shares T, as in :class:`ServeEngine`'s batched queries);
+        mixed request streams bucket on both axes.  Greedy when ``key`` is
+        None, else each token is sampled from the BMA predictive law.  The
+        rows travel as individual :class:`~repro.cluster.api.Request`\\ s
+        through ``submit()``/``drain()``, which stacks them straight back
+        into one batch — bitwise-identical to the pre-PR-9 path.  Returns
+        host arrays trimmed to the true batch.
+        """
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 2:
+            raise ValueError(f"prompt batch must be (B, T), got {tokens.shape}")
+        ids = [self.submit(Request(tokens=row,
+                                   max_new_tokens=int(max_new_tokens),
+                                   key=key))
+               for row in tokens]
+        by_id = {c.request_id: c for c in self.drain()}
+        rows = [by_id[i] for i in ids]
+        return DecodeResult(
+            tokens=np.stack([c.tokens for c in rows]),
+            logits=(np.stack([c.logits for c in rows])
+                    if self.return_logits else None))
+
     __call__ = generate
-
-    @property
-    def num_traces(self) -> int:
-        """Jit traces so far (one per (B rung, T rung, max_new) triple) —
-        a thin view over the engine's :mod:`repro.analysis.instrument`
-        counters."""
-        return self._counters.traces
-
-    @property
-    def num_host_pad_allocs(self) -> int:
-        """Prompt scratch-buffer creations — one per rung pair, never one
-        per request (asserted by ``bench_decode``).  A thin view over the
-        engine's :mod:`repro.analysis.instrument` counters."""
-        return self._counters.pad_allocs
-
-    # -- constructors ---------------------------------------------------------
-    @classmethod
-    def from_cluster(cls, state: SamplerState | PyTree, model,
-                     **kw) -> "DecodeEngine":
-        """Stream directly from a ClusterEngine state — or any chain-stacked
-        params pytree."""
-        params = state.params if isinstance(state, SamplerState) else state
-        return cls(model=model, params=params, **kw)
-
-    @classmethod
-    def from_checkpoint(cls, path: str, model, like: PyTree, *,
-                        num_chains: Optional[int] = None,
-                        **kw) -> "DecodeEngine":
-        """Restore a bank saved by :meth:`ClusterEngine.save_ensemble` (or
-        broadcast a single-model checkpoint to ``num_chains``) and stream
-        from it — the same checkpoint layout :class:`ServeEngine` restores.
-        ``like`` is the *single-chain* params structure."""
-        from repro.checkpoint import restore_ensemble
-
-        params = restore_ensemble(path, like, num_chains=num_chains)
-        return cls(model=model, params=params, **kw)

@@ -1,0 +1,453 @@
+"""Continuous batching over a paged KV bank — slot-level BMA serving.
+
+:class:`~repro.cluster.decode.DecodeEngine` convoys: every sequence in a
+``generate()`` batch shares one prompt length and one generation budget, so
+a mixed request stream pays the *longest* request's latency on every row.
+:class:`PagedDecodeEngine` breaks the convoy.  The bank's KV state becomes
+one **shared block pool per chain** (:meth:`Model.init_paged_bank` —
+``(C, L, n_pages, page_size, KV, hd)``) and every serving slot maps its
+logical context into that pool through a per-slot **page table**, so
+
+- sequences of wildly different lengths share HBM with no per-request
+  reallocation (a slot holds pages, not a ``max_seq`` ring);
+- a waiting prompt is prefilled **the moment any sequence finishes or is
+  evicted** — admission is per slot, not per batch;
+- the decode step stays *one* jitted program for the life of the engine:
+  inactive slots keep stepping against the reserved **garbage page**
+  (physical page 0) with their positions clamped to 0, so slot churn never
+  changes a traced shape.
+
+Scheduling.  ``submit()`` enqueues :class:`~repro.cluster.api.Request`\\ s;
+``step()`` admits waiting requests into free slots (highest priority
+first, FIFO within a priority), runs one ``decode_chunk``-step scanned
+micro-batch over all slots, and completes whatever finished.  When every
+slot is busy and a strictly-higher-priority request waits, the
+lowest-priority active slot is **preempted**: its pages are freed, its
+generated tokens discarded, and its request requeued — replay is
+deterministic because sampling keys are folded per absolute position
+(``fold_in(key, pos)``), not per call.
+
+Parity contract.  The per-token math is the contiguous engine's, re-read
+through a page table: prefill is the same bucket-padded ``forward``;
+the step attention gathers pages in logical order so it is invariant to
+physical page placement; the per-token ``(C, S, V)`` logit block crosses
+the same :meth:`~repro.cluster.api.BankEngine._wrap_bma` collective
+(all-gather + replicated :func:`~repro.models.predictive.bma_logits`).
+On a single-sequence stream with matching ladders the tokens and logits
+are **bitwise-equal** to :meth:`DecodeEngine.generate` (greedy), and the
+fused Pallas page-table kernel is bitwise-equal to its jnp oracle —
+pinned in ``tests/test_paged.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.cluster.api import (
+    FINISH_LENGTH,
+    BankEngine,
+    Completion,
+    Request,
+)
+from repro.obs.metrics import LATENCY_MS_BUCKETS, registry as _registry
+from repro.obs.trace import now as _now, span as _span, tracer as _tracer
+from repro.utils import bucket_size
+
+PyTree = Any
+
+
+class PageAllocator:
+    """Free-list allocator over the physical pages of a paged KV pool.
+
+    Page 0 is reserved as the garbage page inactive slots write into and is
+    never handed out.  ``alloc(n)`` returns ``n`` page ids or ``None`` if
+    the pool can't cover them (no partial allocation); ``free(pages)``
+    returns them.  The scheduler sizes the pool so a free *slot* always
+    implies enough free pages (``num_slots * pages_per_slot + 1``), making
+    admission a slot decision — the allocator is the accounting that keeps
+    that invariant checkable.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (garbage + 1), got {num_pages}")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))  # pop() -> ascending
+
+    @property
+    def free_pages(self) -> int:
+        """Pages currently available (garbage page excluded)."""
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` physical page ids, or ``None`` if fewer than ``n`` free."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Return page ids to the pool (garbage page 0 is rejected)."""
+        for p in pages:
+            if not 0 < p < self.num_pages:
+                raise ValueError(f"bad page id {p}")
+        self._free.extend(pages)
+
+
+@dataclass
+class _Active:
+    """Host-side bookkeeping for one occupied serving slot."""
+
+    request: Request
+    pages: List[int]
+    tokens: List[int]
+    logits: List[np.ndarray]
+    seq: int  # admission sequence number (evict ties: youngest goes)
+
+
+@dataclass
+class PagedDecodeEngine(BankEngine):
+    """Continuously-batched BMA generation over a paged KV bank.
+
+    ``model``/``params`` are as in :class:`~repro.cluster.decode.
+    DecodeEngine` (full-attention stacked transformers only — a sliding
+    window would need per-slot ring pages).  ``num_slots`` sequences decode
+    concurrently; each may hold up to ``max_seq / page_size`` pages of a
+    pool sized so a free slot always implies enough free pages.  ``step()``
+    pumps the scheduler once (admit -> one ``decode_chunk``-token scanned
+    micro-batch -> complete/admit); ``submit()``/``drain()`` are the
+    request-level :class:`~repro.cluster.api.Endpoint` surface.  Per-request
+    ``key=None`` decodes that slot greedily; a key samples its tokens from
+    the BMA law with position-folded subkeys (deterministic under replay).
+    ``prompt_buckets`` is the prompt-length ladder: one prefill trace per
+    rung, plus exactly one decode-step trace for the engine's lifetime.
+    """
+
+    model: Any
+    params: PyTree
+    num_slots: int = 8
+    page_size: int = 16
+    max_seq: int = 256
+    decode_chunk: int = 8
+    prompt_buckets: Optional[Sequence[int]] = None  # prompt-length ladder
+    mesh: Any = None
+    chain_axis: str = "data"
+    shard_params: bool = False
+    fused: bool = False
+    fused_interpret: Optional[bool] = None  # default: compiled only on TPU
+    return_logits: bool = False
+
+    _FRONT_FIELD = "model"
+
+    def __post_init__(self):
+        from repro.models.transformer import Model
+
+        self._init_bank("PagedDecodeEngine")
+        cfg = self.model.cfg if hasattr(self.model, "cfg") else self.model
+        self._model = Model(cfg, mesh=None, remat=False,
+                            decode_fused=self.fused,
+                            decode_interpret=self.fused_interpret)
+        self._model._require_paged("PagedDecodeEngine")
+        if self.max_seq % self.page_size:
+            raise ValueError(
+                f"max_seq={self.max_seq} must be a multiple of "
+                f"page_size={self.page_size}")
+        if self.decode_chunk < 1 or self.num_slots < 1:
+            raise ValueError("need decode_chunk >= 1 and num_slots >= 1")
+        self.pages_per_slot = self.max_seq // self.page_size
+        self.num_pages = self.num_slots * self.pages_per_slot + 1
+        self._allocator = PageAllocator(self.num_pages)
+        self._shard_bank()
+        self._pages = self._model.init_paged_bank(
+            self.num_chains, self.num_pages, self.page_size)
+        if self.mesh is not None:
+            self._pages = jax.device_put(
+                self._pages, NamedSharding(self.mesh, P(self.chain_axis)))
+        S = self.num_slots
+        self._tables = np.zeros((S, self.pages_per_slot), np.int32)
+        self._positions = np.zeros((S,), np.int32)
+        self._remaining = np.zeros((S,), np.int32)
+        self._last_tok = np.zeros((S,), np.int32)
+        self._keys = np.zeros((S, 2), np.uint32)
+        self._greedy = np.ones((S,), bool)
+        self._slots: List[Optional[_Active]] = [None] * S
+        self._waiting: List[Request] = []
+        self._seq = 0
+        reg = _registry()
+        self._m_requests = reg.counter("paged.requests", "requests completed")
+        self._m_tokens = reg.counter("paged.tokens", "tokens generated")
+        self._m_admissions = reg.counter("paged.admissions",
+                                         "slot admissions (prefills)")
+        self._m_evictions = reg.counter(
+            "paged.evictions", "priority preemptions (request requeued)")
+        self._m_occupancy = reg.gauge("paged.slot_occupancy",
+                                      "active slots / num_slots")
+        self._m_pages = reg.gauge(
+            "paged.page_utilization",
+            "allocated pages / pool (garbage page excluded)")
+        self._m_ttft = reg.histogram(
+            "paged.ttft_ms", LATENCY_MS_BUCKETS,
+            "submit -> first token on host (emitted at admission prefill)")
+        self._prefill_fn = jax.jit(self._prefill_core, donate_argnums=(1,))
+        self._step_fn = jax.jit(self._step_core, donate_argnums=(1,))
+
+    # -- traced programs ------------------------------------------------------
+    def _prefill_core(self, params, pages, tokens, table, prompt_len, key,
+                      greedy):
+        # python side effect: runs once per prompt-length rung
+        self._counters.trace("paged_prefill")
+        ax = self.chain_axis
+
+        def body(reduce, params, pages, tokens, table, prompt_len, key,
+                 greedy):
+            run = jax.vmap(self._model.paged_prefill,
+                           in_axes=(0, None, 0, None, None))
+            last, pages = run(params, tokens, pages, table, prompt_len)
+            logp = reduce(last)[0]  # (C, 1, V) -> (V,)
+            k = jax.random.fold_in(key, prompt_len)
+            tok = jnp.where(greedy, jnp.argmax(logp, axis=-1),
+                            jax.random.categorical(k, logp)).astype(jnp.int32)
+            return tok, logp, pages
+
+        return self._wrap_bma(
+            body, in_specs=(P(ax), P(ax), P(), P(), P(), P(), P()),
+            out_specs=(P(), P(), P(ax)))(params, pages, tokens, table,
+                                         prompt_len, key, greedy)
+
+    def _step_core(self, params, pages, tables, positions, remaining,
+                   last_tok, keys, greedy):
+        # python side effect: runs exactly once — slot churn never retraces
+        self._counters.trace("paged_step")
+        ax = self.chain_axis
+        want_logits = self.return_logits
+
+        def body(reduce, params, pages, tables, positions, remaining,
+                 last_tok, keys, greedy):
+            step = jax.vmap(self._model.paged_step,
+                            in_axes=(0, 0, None, None, None))
+            none = jnp.zeros((0,), jnp.float32)
+
+            def micro(carry, _):
+                pages, positions, remaining, last_tok = carry
+                active = remaining > 0
+                # inactive slots write position 0 of their zeroed table row:
+                # the garbage page — real pages are never touched
+                pos = jnp.where(active, positions, 0)
+                per_chain, pages = step(params, pages, tables,
+                                        last_tok[:, None], pos)
+                logp = reduce(per_chain[:, :, 0])  # (S, V)
+                kt = jax.vmap(jax.random.fold_in)(keys, pos + 1)
+                sampled = jax.vmap(jax.random.categorical)(kt, logp)
+                nxt = jnp.where(greedy, jnp.argmax(logp, axis=-1),
+                                sampled).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, last_tok)
+                carry = (pages, jnp.where(active, positions + 1, positions),
+                         remaining - active.astype(jnp.int32), nxt)
+                return carry, (jnp.where(active, nxt, -1),
+                               logp if want_logits else none)
+
+            (pages, _, _, _), (toks, logps) = jax.lax.scan(
+                micro, (pages, positions, remaining, last_tok), None,
+                length=self.decode_chunk)
+            return pages, toks, logps
+
+        return self._wrap_bma(
+            body,
+            in_specs=(P(ax), P(ax), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(ax), P(), P()))(params, pages, tables, positions,
+                                         remaining, last_tok, keys, greedy)
+
+    # -- request validation / queueing ----------------------------------------
+    def _validate_request(self, request: Request) -> None:
+        tokens = np.asarray(request.tokens)
+        if tokens.ndim != 1:
+            raise ValueError(
+                f"a paged Request carries one 1-D prompt, got {tokens.shape}")
+        if request.max_new_tokens < 1:
+            raise ValueError(
+                f"need max_new_tokens >= 1, got {request.max_new_tokens}")
+        t_rung = bucket_size(tokens.shape[0], self.prompt_buckets)
+        need = max(t_rung, tokens.shape[0] + request.max_new_tokens)
+        if need > self.max_seq:
+            raise ValueError(
+                f"prompt rung {t_rung} + max_new_tokens "
+                f"{request.max_new_tokens} overflows the {self.max_seq}-token "
+                "slot capacity (num pages x page size); raise max_seq")
+        request.tokens = tokens
+
+    def _enqueue(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            if not hasattr(r, "_seq"):  # preserved across eviction requeues
+                r._seq = self._seq
+                self._seq += 1
+        self._waiting.extend(requests)
+        self._waiting.sort(key=lambda r: (-r.priority, r._seq))
+
+    # -- scheduler: admission / eviction / completion --------------------------
+    def _free_slot(self) -> Optional[int]:
+        for s, a in enumerate(self._slots):
+            if a is None:
+                return s
+        return None
+
+    def _evict(self, s: int) -> None:
+        """Preempt slot ``s``: free its pages, discard its tokens, requeue
+        its request (position-folded keys make the replay identical)."""
+        victim = self._slots[s]
+        self._allocator.free(victim.pages)
+        self._tables[s] = 0
+        self._remaining[s] = 0
+        self._slots[s] = None
+        victim.request.timing["evictions"] = \
+            victim.request.timing.get("evictions", 0) + 1
+        self._m_evictions.inc()
+        self._enqueue([victim.request])
+
+    def _admit(self, finished: List[Completion]) -> None:
+        while self._waiting:
+            req = self._waiting[0]
+            s = self._free_slot()
+            if s is None:
+                active = [i for i, a in enumerate(self._slots)
+                          if a is not None]
+                victim = min(active, key=lambda i: (
+                    self._slots[i].request.priority, -self._slots[i].seq))
+                if self._slots[victim].request.priority >= req.priority:
+                    return  # nothing strictly lower-priority to preempt
+                self._evict(victim)
+                continue
+            self._waiting.pop(0)
+            done = self._admit_one(s, req)
+            if done is not None:  # max_new_tokens == 1: finished at prefill
+                finished.append(done)
+
+    def _admit_one(self, s: int, req: Request) -> Optional[Completion]:
+        T = int(req.tokens.shape[0])
+        t_rung = bucket_size(T, self.prompt_buckets)
+        n_pages = -(-max(t_rung, T + req.max_new_tokens) // self.page_size)
+        pages = self._allocator.alloc(n_pages)
+        assert pages is not None, "free slot without free pages (pool bug)"
+        t0 = _now()
+        self._tables[s] = 0
+        self._tables[s, :n_pages] = pages
+        buf = self._scratch.get(("prompt", t_rung), (1, t_rung), np.int32)
+        buf[0, :T] = req.tokens
+        buf[0, T:] = req.tokens[-1]  # right pad: causally invisible
+        greedy = req.key is None
+        key = np.zeros((2,), np.uint32) if greedy else req.key
+        tok0, logp0, self._pages = self._prefill_fn(
+            self.params, self._pages, buf, self._tables[s],
+            np.asarray(T, np.int32), key, np.asarray(greedy))
+        tok0 = int(tok0)
+        t1 = _now()
+        req.timing.setdefault("admitted", t1)
+        req.timing["first_token"] = t1  # TTFT: emitted at admission
+        self._m_admissions.inc()
+        self._m_ttft.observe((t1 - req.timing["submitted"]) * 1e3)
+        _tracer().record("paged.admit", t0, t1, slot=s,
+                         request_id=req.request_id, T=T, t_rung=t_rung,
+                         pages=n_pages)
+        active = _Active(request=req, pages=pages, tokens=[tok0],
+                         logits=[np.asarray(logp0)] if self.return_logits
+                         else [], seq=self._seq)
+        self._seq += 1
+        if req.max_new_tokens == 1:
+            self._slots[s] = active
+            return self._finish(s)
+        self._slots[s] = active
+        self._positions[s] = T       # tok0 is written here next micro-step
+        self._remaining[s] = req.max_new_tokens - 1
+        self._last_tok[s] = tok0
+        self._keys[s] = key
+        self._greedy[s] = greedy
+        self._gauges()
+        return None
+
+    def _finish(self, s: int) -> Completion:
+        a = self._slots[s]
+        self._allocator.free(a.pages)
+        self._tables[s] = 0
+        self._remaining[s] = 0
+        self._slots[s] = None
+        r = a.request
+        r.timing["finished"] = _now()
+        _tracer().record("paged.request", r.timing["submitted"],
+                         r.timing["finished"], slot=s,
+                         request_id=r.request_id,
+                         new_tokens=len(a.tokens),
+                         evictions=r.timing.get("evictions", 0))
+        self._m_requests.inc()
+        self._m_tokens.inc(len(a.tokens))
+        self._gauges()
+        return Completion(
+            request_id=r.request_id,
+            tokens=np.asarray(a.tokens, np.int32),
+            logits=(np.stack(a.logits) if self.return_logits else None),
+            finish_reason=FINISH_LENGTH, timing=r.timing)
+
+    def _gauges(self) -> None:
+        used = sum(a is not None for a in self._slots)
+        self._m_occupancy.set(used / self.num_slots)
+        self._m_pages.set(
+            1.0 - self._allocator.free_pages / (self.num_pages - 1))
+
+    @property
+    def num_active(self) -> int:
+        """Slots currently decoding a sequence."""
+        return sum(a is not None for a in self._slots)
+
+    @property
+    def num_waiting(self) -> int:
+        """Requests admitted to the scheduler but not yet in a slot
+        (submitted-but-unpumped requests are in ``_pending`` until the next
+        ``step()``/``drain()``)."""
+        return len(self._waiting)
+
+    # -- the pump --------------------------------------------------------------
+    def step(self) -> List[Completion]:
+        """One scheduler pump: admit waiting requests into free slots, run
+        one ``decode_chunk``-token scanned micro-batch over every slot, and
+        return whatever finished (freed slots are refilled immediately, so
+        the next chunk decodes the newly admitted prompts too)."""
+        self._enqueue(self._pending)
+        self._pending = []
+        finished: List[Completion] = []
+        self._admit(finished)
+        if self.num_active:
+            with _span("paged.decode_chunk", active=self.num_active,
+                       chunk=self.decode_chunk):
+                self._pages, toks, logps = self._step_fn(
+                    self.params, self._pages, self._tables, self._positions,
+                    self._remaining, self._last_tok, self._keys, self._greedy)
+                toks = np.asarray(toks)  # (chunk, S): blocks for real latency
+                logps = np.asarray(logps) if self.return_logits else None
+            for s, a in enumerate(self._slots):
+                if a is None:
+                    continue
+                n = min(self.decode_chunk, int(self._remaining[s]))
+                a.tokens.extend(int(t) for t in toks[:n, s])
+                if self.return_logits:
+                    a.logits.extend(logps[t, s] for t in range(n))
+                self._positions[s] += n
+                self._remaining[s] -= n
+                self._last_tok[s] = toks[n - 1, s]
+                if self._remaining[s] == 0:
+                    finished.append(self._finish(s))
+        self._admit(finished)  # admission the moment a sequence finishes
+        return finished
+
+    def _drain(self, requests: Sequence[Request]) -> List[Completion]:
+        self._enqueue(list(requests))
+        done = {}
+        while self._waiting or self.num_active:
+            for c in self.step():
+                done[c.request_id] = c
+        ordered = [done.pop(r.request_id) for r in requests
+                   if r.request_id in done]
+        return ordered + list(done.values())

@@ -24,6 +24,13 @@ Request batching is shape-bucketed: query counts are padded up a bucket
 ladder (powers of two by default) by edge-replicating the last query, so a
 mixed request stream compiles **one trace per bucket** and the padded query
 buffer — created fresh per request — is donated to the jitted call.
+
+Since PR 9 the engine is also a request-level
+:class:`~repro.cluster.api.Endpoint`: ``submit()`` enqueues individual
+:class:`~repro.cluster.api.Request` queries and ``drain()`` batches
+compatible ones back through the bucketed program above.  ``serve()`` is a
+thin shim over that path and stays bitwise-identical to the pre-PR-9
+batch-level API (pinned in ``tests/test_api.py``).
 """
 
 from __future__ import annotations
@@ -36,11 +43,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.analysis.instrument import Counters as _Counters, counters as _counters
+from repro.cluster.api import (
+    FINISH_QUERY,
+    BankEngine,
+    Completion,
+    HostScratch,
+    Request,
+)
 from repro.obs.metrics import LATENCY_MS_BUCKETS, registry as _registry
 from repro.obs.trace import now as _now, span as _span
-from repro.samplers.base import SamplerState
-from repro.utils import SHARD_MAP_CHECK_KW, bucket_size, shard_map
+from repro.utils import bucket_size
+
+__all__ = [
+    "HostScratch",  # moved to repro.cluster.api in PR 9; re-exported here
+    "PredictFn",
+    "ServeEngine",
+    "ServeResult",
+    "bucket_size",
+    "predictive_stats",
+]
 
 PyTree = Any
 #: per-chain forward: (single-chain params, queries (Q, ...)) -> preds (Q, ...)
@@ -89,54 +110,6 @@ def predictive_stats(preds: jax.Array, qs: jax.Array) -> ServeResult:
 # to training batches.
 
 
-class HostScratch:
-    """Reusable host-side pad buffers, one per (bucket rung, leaf).
-
-    Padding a request up its bucket rung is shape-varying glue that must
-    stay in numpy on the serving hot path — but a fresh ``np.concatenate``
-    per request still allocates (and touches) a buffer every call.  This
-    keeps one scratch array per ``(rung, leaf key, trailing shape, dtype)``
-    and rewrites it in place, so a steady-state request stream performs
-    **zero** per-request allocations on the padding path (``allocs`` stops
-    growing once every rung has been seen — asserted by the serve/decode
-    benches).  Reuse is safe because ``jit`` copies host arrays to device
-    synchronously at dispatch.
-
-    Every buffer creation is reported to ``counters``
-    (a :class:`repro.analysis.instrument.Counters` handle) when one is
-    given, so an :func:`~repro.analysis.instrument.instrument` region around
-    a warm request stream sees zero pad-alloc events.
-    """
-
-    def __init__(self, counters: Optional[_Counters] = None):
-        self._bufs: dict = {}
-        self.allocs = 0  # scratch-buffer creations, NOT per-request work
-        self._counters = counters
-
-    def get(self, key, shape, dtype) -> np.ndarray:
-        """The scratch buffer for ``key`` (caller fills it)."""
-        k = (key, tuple(shape), np.dtype(dtype).str)
-        buf = self._bufs.get(k)
-        if buf is None:
-            buf = np.empty(shape, dtype)
-            self._bufs[k] = buf
-            self.allocs += 1
-            if self._counters is not None:
-                self._counters.pad_alloc()
-        return buf
-
-    def pad(self, x: np.ndarray, n: int, key=0) -> np.ndarray:
-        """``x`` with its leading axis padded to ``n`` by edge-replicating
-        the last row, written into the reused scratch."""
-        q = x.shape[0]
-        if q == n:
-            return x  # jit transfers host arrays; caller's buffer intact
-        buf = self.get(("pad", key), (n,) + x.shape[1:], x.dtype)
-        buf[:q] = x
-        buf[q:] = x[-1:]
-        return buf
-
-
 def _pad_queries(queries: PyTree, n: int, *, copy_exact: bool,
                  scratch: HostScratch) -> PyTree:
     """Pad every leaf's leading (query) axis to ``n`` by edge-replicating the
@@ -167,7 +140,7 @@ def _pad_queries(queries: PyTree, n: int, *, copy_exact: bool,
 
 
 @dataclass
-class ServeEngine:
+class ServeEngine(BankEngine):
     """Batched posterior-predictive serving over a chain-stacked parameter
     bank.
 
@@ -192,13 +165,10 @@ class ServeEngine:
     chain_axis: str = "data"
     donate: bool = True
 
+    _FRONT_FIELD = "predict_fn"
+
     def __post_init__(self):
-        leaves = jax.tree_util.tree_leaves(self.params)
-        if not leaves:
-            raise ValueError("params bank is empty")
-        self.num_chains = int(leaves[0].shape[0])
-        self._counters = _counters("ServeEngine")
-        self._host_scratch = HostScratch(self._counters)
+        self._init_bank("ServeEngine")
         reg = _registry()
         self._m_requests = reg.counter("serve.requests", "serve() calls")
         self._m_queries = reg.counter("serve.queries",
@@ -209,60 +179,23 @@ class ServeEngine:
         self._m_util = reg.gauge(
             "serve.bucket_utilization",
             "last request's Q / padded bucket size")
-        if self.buckets is not None:
-            self.buckets = sorted(int(b) for b in self.buckets)
         self._qs = jnp.asarray(self.quantiles, jnp.float32)
-        if self.mesh is not None:
-            n_shards = self.mesh.shape[self.chain_axis]
-            if self.num_chains % n_shards:
-                raise ValueError(
-                    f"num_chains={self.num_chains} must be divisible by mesh "
-                    f"axis {self.chain_axis!r} (size {n_shards})")
-            sharding = jax.sharding.NamedSharding(self.mesh, P(self.chain_axis))
-            self.params = jax.tree_util.tree_map(
-                lambda x: jax.device_put(x, sharding), self.params)
+        self._shard_bank()
         self._stats = jax.jit(self._build_stats(),
                               donate_argnums=(1,) if self.donate else ())
 
     def _build_stats(self):
         forward = jax.vmap(self.predict_fn, in_axes=(0, None))
-
-        def stats(params, queries):
-            # python side effect: runs once per trace, never per call
-            self._counters.trace("stats")
-            return predictive_stats(forward(params, queries), self._qs)
-
-        if self.mesh is None:
-            return stats
         ax = self.chain_axis
 
-        def sharded_stats(params, queries):
-            self._counters.trace("sharded_stats")
+        def stats(reduce, params, queries):
+            # python side effect: runs once per trace, never per call
+            self._counters.trace("stats")
+            return reduce(forward(params, queries))
 
-            def body(p, q):
-                local = forward(p, q)  # (C/shards, Q, ...)
-                preds = jax.lax.all_gather(local, ax, axis=0, tiled=True)
-                return predictive_stats(preds, self._qs)
-
-            return shard_map(body, mesh=self.mesh, in_specs=(P(ax), P()),
-                             out_specs=P(), **SHARD_MAP_CHECK_KW)(
-                                 params, queries)
-
-        return sharded_stats
-
-    @property
-    def num_traces(self) -> int:
-        """Jit traces so far (one per shape bucket) — a thin view over the
-        engine's :mod:`repro.analysis.instrument` counters."""
-        return self._counters.traces
-
-    @property
-    def num_host_pad_allocs(self) -> int:
-        """Host scratch-buffer creations so far — one per (bucket rung,
-        query leaf), NOT one per request; the serve bench asserts this stops
-        growing once the stream's rungs have all been seen.  A thin view
-        over the engine's :mod:`repro.analysis.instrument` counters."""
-        return self._counters.pad_allocs
+        return self._wrap_bma(
+            stats, in_specs=(P(ax), P()), out_specs=P(),
+            reduce_full=lambda preds: predictive_stats(preds, self._qs))
 
     # -- streaming ------------------------------------------------------------
     def decoder(self, model, **kw) -> "Any":
@@ -280,39 +213,51 @@ class ServeEngine:
         kw.setdefault("chain_axis", self.chain_axis)
         return DecodeEngine(model=model, params=self.params, **kw)
 
-    # -- constructors ---------------------------------------------------------
-    @classmethod
-    def from_cluster(cls, state: SamplerState | PyTree,
-                     predict_fn: PredictFn, **kw) -> "ServeEngine":
-        """Serve directly from a (possibly still sharded) ClusterEngine
-        state — or any chain-stacked params pytree."""
-        params = state.params if isinstance(state, SamplerState) else state
-        return cls(predict_fn=predict_fn, params=params, **kw)
+    # -- request-level endpoint -----------------------------------------------
+    def _validate_request(self, request: Request) -> None:
+        if request.max_new_tokens:
+            raise ValueError(
+                "ServeEngine answers single-shot predictive queries; a "
+                f"Request with max_new_tokens="
+                f"{request.max_new_tokens} belongs on a decode engine")
 
-    @classmethod
-    def from_checkpoint(cls, path: str, like: PyTree, predict_fn: PredictFn,
-                        *, num_chains: Optional[int] = None,
-                        **kw) -> "ServeEngine":
-        """Restore a bank saved by :meth:`ClusterEngine.save_ensemble` (or
-        broadcast a single-model checkpoint to ``num_chains``) and serve it.
-        ``like`` is the *single-chain* params structure."""
-        from repro.checkpoint import restore_ensemble
-
-        params = restore_ensemble(path, like, num_chains=num_chains)
-        return cls(predict_fn=predict_fn, params=params, **kw)
+    def _drain(self, requests):
+        """Group pending single-query requests by structure (treedef +
+        per-leaf trailing shape/dtype), stack each group into one batched
+        :meth:`_serve_batch` call, and hand every request its row of the
+        statistics back as a :class:`~repro.cluster.api.Completion` (in
+        ``stats``, as a per-query :class:`ServeResult` view)."""
+        groups: dict = {}
+        prepped = []
+        for r in requests:
+            leaves, treedef = jax.tree_util.tree_flatten(r.tokens)
+            arrs = [np.asarray(x) for x in leaves]
+            sig = (treedef, tuple((a.shape, a.dtype.str) for a in arrs))
+            groups.setdefault(sig, []).append((r, arrs))
+            prepped.append(sig)
+        out = {}
+        for sig in dict.fromkeys(prepped):  # first-submission order
+            rows = groups[sig]
+            treedef = sig[0]
+            stacked = [np.stack([arrs[i] for _, arrs in rows])
+                       for i in range(len(rows[0][1]))]
+            res = self._serve_batch(
+                jax.tree_util.tree_unflatten(treedef, stacked))
+            t_done = _now()
+            for i, (r, _) in enumerate(rows):
+                r.timing["finished"] = t_done
+                out[r.request_id] = Completion(
+                    request_id=r.request_id,
+                    tokens=np.zeros((0,), np.int32), logits=None,
+                    finish_reason=FINISH_QUERY, timing=r.timing,
+                    stats=ServeResult(mean=res.mean[i], var=res.var[i],
+                                      quantiles=res.quantiles[:, i]))
+        return [out[r.request_id] for r in requests]
 
     # -- serving --------------------------------------------------------------
-    def serve(self, queries: PyTree) -> ServeResult:
-        """Answer one batched predictive request.
-
-        ``queries`` leaves share a leading query axis ``Q``; the batch is
-        padded to its shape bucket and pushed through the
-        traced-once-per-bucket jitted reduction.  Returns a
-        :class:`ServeResult` of *host* (numpy) per-query statistics — this
-        is the serving boundary, and trimming the padding on host keeps a
-        stream of distinct request sizes from compiling one slice program
-        per ``(bucket, Q)`` pair.
-        """
+    def _serve_batch(self, queries: PyTree) -> ServeResult:
+        """The batch-level program: pad one query batch to its bucket, run
+        the traced-once-per-bucket jitted reduction, trim on host."""
         q = int(jax.tree_util.tree_leaves(queries)[0].shape[0])
         n = bucket_size(q, self.buckets)
         t0 = _now()
@@ -327,5 +272,29 @@ class ServeEngine:
         self._m_util.set(q / n)
         return ServeResult(mean=mean[:q], var=var[:q],
                            quantiles=quantiles[:, :q])
+
+    def serve(self, queries: PyTree) -> ServeResult:
+        """Answer one batched predictive request.
+
+        ``queries`` leaves share a leading query axis ``Q``; the batch is
+        split into per-query :class:`~repro.cluster.api.Request`\\ s,
+        submitted, and drained — the drain stacks them straight back into
+        one bucketed batch, so the result is bitwise-identical to the
+        pre-PR-9 batch-level path.  Returns a :class:`ServeResult` of
+        *host* (numpy) per-query statistics — this is the serving boundary,
+        and trimming the padding on host keeps a stream of distinct request
+        sizes from compiling one slice program per ``(bucket, Q)`` pair.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(queries)
+        arrs = [np.asarray(x) for x in leaves]
+        q = int(arrs[0].shape[0])
+        ids = [self.submit(Request(tokens=jax.tree_util.tree_unflatten(
+            treedef, [a[i] for a in arrs]))) for i in range(q)]
+        by_id = {c.request_id: c for c in self.drain()}
+        rows = [by_id[i].stats for i in ids]
+        return ServeResult(
+            mean=np.stack([r.mean for r in rows]),
+            var=np.stack([r.var for r in rows]),
+            quantiles=np.stack([r.quantiles for r in rows], axis=1))
 
     __call__ = serve

@@ -34,6 +34,9 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+__all__ = ["decode_step_2d", "paged_decode_step"]
+
+
 def _kernel(q_ref, kn_ref, vn_ref, kc_ref, vc_ref, valid_ref, slot_ref,
             o_ref, ko_ref, vo_ref):
     _, smax, KV, hd = kc_ref.shape
@@ -93,3 +96,97 @@ def decode_step_2d(q, k_new, v_new, k_cache, v_cache, valid, slot,
         input_output_aliases={3: 1, 4: 2},  # caches update in place
         interpret=interpret,
     )(q, k_new, v_new, k_cache, v_cache, valid, slot)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: page-table gather over a shared block pool
+# ---------------------------------------------------------------------------
+def _paged_kernel(tbl_ref, pos_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref,
+                  o_ref, ko_ref, vo_ref):
+    _, ps, KV, hd = kc_ref.shape
+    maxp = tbl_ref.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    pos = pos_ref[0]
+    # store the new k/v into this slot's page for the current position; only
+    # these two rows of the shared pool are touched (partial store on the
+    # aliased output), every other page survives bit-for-bit
+    pg = tbl_ref[0, pos // ps]
+    off = pos % ps
+    ko_ref[pl.ds(pg, 1), pl.ds(off, 1)] = kn_ref[0][None, None]
+    vo_ref[pl.ds(pg, 1), pl.ds(off, 1)] = vn_ref[0][None, None]
+
+    # gather this slot's pages in *logical* order — the attention result is
+    # invariant to how the allocator permuted the physical pages
+    def gather(j, acc):
+        ka, va = acc
+        page = tbl_ref[0, j]
+        kt = kc_ref[pl.ds(page, 1)][0]
+        vt = vc_ref[pl.ds(page, 1)][0]
+        return (jax.lax.dynamic_update_index_in_dim(ka, kt, j, 0),
+                jax.lax.dynamic_update_index_in_dim(va, vt, j, 0))
+
+    zero = jnp.zeros((maxp, ps, KV, hd), kc_ref.dtype)
+    k_all, v_all = jax.lax.fori_loop(0, maxp, gather, (zero, zero))
+    # overlay the new row at its logical position: the gather may observe the
+    # pool before or after this step's store (the output aliases the input),
+    # and the select makes both orders produce identical attention inputs
+    sel = jax.lax.broadcasted_iota(jnp.int32, (maxp * ps, KV, hd), 0) == pos
+    k = jnp.where(sel, kn_ref[0][None], k_all.reshape(maxp * ps, KV, hd))
+    v = jnp.where(sel, vn_ref[0][None], v_all.reshape(maxp * ps, KV, hd))
+    # single-query attention over the gathered logical window, fp32 softmax
+    # (the same math as _kernel; validity is positional: logical index <= pos)
+    q32 = q_ref[0].astype(jnp.float32) * scale            # (KV, G, hd)
+    s = jnp.einsum("ngh,cnh->ngc", q32, k.astype(jnp.float32))
+    valid = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2) <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("ngc,cnh->ngh", p, v.astype(jnp.float32))
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_step(q, k_new, v_new, k_pages, v_pages, tables, pos,
+                      *, interpret=True):
+    """Fused paged decode step: slot-table gather + slot write + attention.
+
+    q: (S, KV, G, hd); k_new, v_new: (S, KV, hd); k_pages, v_pages:
+    (n_pages, page_size, KV, hd) — the block pool **shared by every slot**;
+    tables: (S, maxp) int32 per-slot page table (logical page j of slot i
+    lives in physical page ``tables[i, j]``); pos: (S,) int32 absolute
+    position the new token is written at (and the highest logical index
+    attended — validity is ``logical index <= pos``, full attention only).
+
+    Returns (o (S, KV, G, hd) in q.dtype, k_pages', v_pages') with exactly
+    one ``(page, offset)`` row per slot replaced in each pool (aliased in
+    place).  The grid walks slots; a chain-vmapped engine batches the pool
+    into extra grid dimensions via the pallas batching rule.
+    """
+    S, KV, G, hd = q.shape
+    maxp = tables.shape[1]
+    return pl.pallas_call(
+        _paged_kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, maxp), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, KV, G, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, KV, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, KV, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # shared k pool
+            pl.BlockSpec(memory_space=pl.ANY),  # shared v pool
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, KV, G, hd), q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        input_output_aliases={5: 1, 6: 2},  # pools update in place
+        interpret=interpret,
+    )(tables, pos, q, k_new, v_new, k_pages, v_pages)

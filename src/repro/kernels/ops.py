@@ -85,6 +85,28 @@ def fused_decode_step(q: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
     return o.reshape(B, H, hd), kc, vc
 
 
+def fused_paged_decode_step(q: jnp.ndarray, k_new: jnp.ndarray,
+                            v_new: jnp.ndarray, k_pages: jnp.ndarray,
+                            v_pages: jnp.ndarray, tables: jnp.ndarray,
+                            pos: jnp.ndarray, *, interpret: bool = True):
+    """Fused paged decode step in model layout.
+
+    q: (S, H, hd); k_new, v_new: (S, KV, hd); k_pages, v_pages:
+    (n_pages, page_size, KV, hd) block pool shared by all slots; tables:
+    (S, maxp) int32 per-slot page table; pos: (S,) int32 absolute position
+    per slot.  Returns (o (S, H, hd), k_pages', v_pages').
+    """
+    from repro.kernels import decode_step as ds
+
+    S, H, hd = q.shape
+    KV = k_pages.shape[2]
+    o, kp, vp = ds.paged_decode_step(
+        q.reshape(S, KV, H // KV, hd), k_new, v_new, k_pages, v_pages,
+        jnp.asarray(tables, jnp.int32), jnp.asarray(pos, jnp.int32),
+        interpret=interpret)
+    return o.reshape(S, H, hd), kp, vp
+
+
 def fused_delay_gather(ring_history: PyTree, slots: PyTree, head, depth: int,
                        *, interpret: bool = True) -> PyTree:
     """W-Icon read over a ring-buffer pytree (leaves (depth, *shape)) with

@@ -45,3 +45,41 @@ def decode_step_ref(q, k_new, v_new, k_cache, v_cache, valid, slot):
     p = p / jnp.sum(p, axis=-1, keepdims=True)
     o = jnp.einsum("bngc,bcnh->bngh", p, v.astype(jnp.float32))
     return o.astype(q.dtype), k, v
+
+
+def paged_decode_step_ref(q, k_new, v_new, k_pages, v_pages, tables, pos):
+    """Oracle for the fused *paged* decode step — the same logical-order
+    page gather, new-row overlay, fp32 softmax, and einsum orders as the
+    kernel body, batched over slots.
+
+    q: (S, KV, G, hd); k_new/v_new: (S, KV, hd); k_pages/v_pages:
+    (n_pages, page_size, KV, hd) shared pool; tables: (S, maxp) int32;
+    pos: (S,) int32.  Returns (o, k_pages', v_pages').
+    """
+    S, KV, G, hd = q.shape
+    ps = k_pages.shape[1]
+    maxp = tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    kf = k_pages.reshape(-1, KV, hd)
+    vf = v_pages.reshape(-1, KV, hd)
+    # gather each slot's logical window from the pre-store pool, then overlay
+    # the new row at its logical position (matching the kernel's ordering-
+    # insensitive select)
+    gidx = ((tables * ps)[:, :, None]
+            + jnp.arange(ps)[None, None]).reshape(S, maxp * ps)
+    sel = (jnp.arange(maxp * ps)[None, :, None, None]
+           == pos[:, None, None, None])
+    k = jnp.where(sel, k_new[:, None], kf[gidx])      # (S, maxp*ps, KV, hd)
+    v = jnp.where(sel, v_new[:, None], vf[gidx])
+    q32 = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bngh,bcnh->bngc", q32, k.astype(jnp.float32))
+    valid = jnp.arange(maxp * ps)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bngc,bcnh->bngh", p, v.astype(jnp.float32))
+    widx = tables[jnp.arange(S), pos // ps] * ps + pos % ps
+    return (o.astype(q.dtype),
+            kf.at[widx].set(k_new).reshape(k_pages.shape),
+            vf.at[widx].set(v_new).reshape(v_pages.shape))

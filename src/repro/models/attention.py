@@ -263,3 +263,35 @@ def decode_attention(q, k_cache, v_cache, cache_pos, cur_pos, *, window=None):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bngc,bcnh->bngh", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention(q, k_flat, v_flat, tables, positions, page_size):
+    """Single-query attention over a paged KV pool (unfused reference path).
+
+    q: (S, 1, H, hd) — one query per *slot*; k_flat, v_flat:
+    (n_pages * page_size, KV, hd) — the shared block pool, flattened, with
+    this step's k/v already written; tables: (S, maxp) int32 per-slot page
+    table; positions: (S,) absolute position per slot.
+
+    Each slot's pages are gathered in **logical** order (so the result is
+    invariant to the physical page permutation) and attended with exactly
+    the ops :func:`decode_attention` uses — fp32 softmax, same einsum
+    orders — which keeps the paged path bitwise-equal to the contiguous
+    ring on a single-sequence stream (validity is ``logical index <=
+    position``; full attention only — sliding windows keep the ring path).
+    """
+    S, _, H, hd = q.shape
+    KV = k_flat.shape[1]
+    G = H // KV
+    maxp = tables.shape[1]
+    qh = q.reshape(S, KV, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    gidx = ((tables * page_size)[:, :, None]
+            + jnp.arange(page_size)[None, None]).reshape(S, maxp * page_size)
+    kg = k_flat[gidx]                                 # (S, maxp*ps, KV, hd)
+    vg = v_flat[gidx]
+    s = jnp.einsum("bngh,bcnh->bngc", qh, kg.astype(jnp.float32))
+    valid = jnp.arange(maxp * page_size)[None, :] <= positions[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngc,bcnh->bngh", p, vg.astype(jnp.float32))
+    return o.reshape(S, 1, H, hd).astype(q.dtype)

@@ -30,7 +30,11 @@ import jax.numpy as jnp
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models import xlstm as xlstm_lib
-from repro.models.attention import attention_any, decode_attention
+from repro.models.attention import (
+    attention_any,
+    decode_attention,
+    paged_decode_attention,
+)
 from repro.models.common import (
     apply_rope,
     dense_init,
@@ -187,6 +191,72 @@ def apply_attn(p, x, cfg, positions, *, window, cache=None, cur_pos=None,
         new_kv = {"k": k_cache, "v": v_cache, "pos": pos_arr}
     y = o.reshape(B, S, cfg.q_dim) @ p["wo"]
     return y, new_kv
+
+
+def apply_paged_attn(p, x, cfg, pages, tables, positions, *, fused=False,
+                     fused_interpret=True):
+    """Cached attention over a paged KV pool — one slot per row.
+
+    x: (S, 1, d); pages: dict(k, v) of (n_pages, page_size, KV, hd) pools
+    shared by every slot; tables: (S, maxp) int32; positions: (S,) absolute
+    position per slot (rope + write + validity).  Returns (y, new pages).
+    """
+    S, _, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(S, 1, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(S, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(S, 1, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    ps = pages["k"].shape[1]
+    if fused:
+        from repro.kernels.ops import fused_paged_decode_step
+
+        o, k_pool, v_pool = fused_paged_decode_step(
+            q[:, 0], k[:, 0], v[:, 0], pages["k"], pages["v"], tables,
+            positions, interpret=fused_interpret)
+        o = o[:, None]
+    else:
+        widx = (tables[jnp.arange(S), positions // ps] * ps + positions % ps)
+        kf = pages["k"].reshape(-1, *pages["k"].shape[2:]).at[widx].set(k[:, 0])
+        vf = pages["v"].reshape(-1, *pages["v"].shape[2:]).at[widx].set(v[:, 0])
+        o = paged_decode_attention(q, kf, vf, tables, positions, ps)
+        k_pool = kf.reshape(pages["k"].shape)
+        v_pool = vf.reshape(pages["v"].shape)
+    y = o.reshape(S, 1, cfg.q_dim) @ p["wo"]
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def apply_paged_block(p, x, cfg, block: str, pages, tables, positions, *,
+                      mesh=None, batch_axes=("data",), fsdp_axes=("data",),
+                      fused=False, fused_interpret=True):
+    """One decode step of an attention block against the paged pool — the
+    same residual/norm/MLP ops as :func:`apply_block`'s decode path with
+    :func:`apply_paged_attn` in place of the ring-cache attention.  Returns
+    (x, new pages)."""
+    if block not in ("attn_mlp", "attn_moe"):
+        raise ValueError(f"paged decode needs an attention block, got {block!r}")
+    rs = cfg.residual_scale
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    attn_out, new_pages = apply_paged_attn(
+        p["attn"], h, cfg, pages, tables, positions, fused=fused,
+        fused_interpret=fused_interpret)
+    x = x + rs * attn_out
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if block == "attn_moe":
+        ff, _ = moe_lib.apply_moe(p["moe"], h2, cfg, mesh=mesh,
+                                  batch_axes=batch_axes, fsdp_axes=fsdp_axes)
+    else:
+        ff = apply_mlp(p["mlp"], h2, cfg)
+    x = x + rs * ff
+    return x, new_pages
 
 
 def apply_block(p, x, cfg, block: str, positions, *, mesh=None, batch_axes=("data",),
@@ -412,6 +482,94 @@ class Model:
         self._require_stacked_attention("init_cache_bank")
         return tree_broadcast_leading(self.init_cache(batch_size, max_seq),
                                       num_chains)
+
+    def _require_paged(self, what: str):
+        self._require_stacked_attention(what)
+        if self.cfg.sliding_window:
+            raise ValueError(
+                f"{what} serves full attention only: a sliding window would "
+                "need per-slot ring pages (the contiguous decode cache "
+                "already implements windowed rings)")
+
+    def init_paged_bank(self, num_chains: int, num_pages: int,
+                        page_size: int):
+        """Paged decode-cache bank: one shared block pool per chain.
+
+        Returns ``{"k", "v"}`` of shape ``(num_chains, num_layers,
+        num_pages, page_size, num_kv_heads, head_dim)`` — unlike
+        :meth:`init_cache_bank` there is no per-sequence ring; every serving
+        slot maps its logical pages into the shared pool through a per-slot
+        page table, so mixed-length sequences share HBM without per-request
+        reallocation.  Physical page 0 is reserved by the scheduler as the
+        garbage page inactive slots write into.  The bank is donated across
+        steps by :class:`~repro.cluster.paged.PagedDecodeEngine`.
+        """
+        self._require_paged("init_paged_bank")
+        cfg = self.cfg
+        shape = (num_chains, cfg.num_layers, num_pages, page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        dtype = dtype_of(cfg)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    def paged_prefill(self, params, tokens, pages, table, prompt_len):
+        """Prefill one prompt into its slot's pages.
+
+        ``tokens`` is a bucket-padded ``(1, T_pad)`` prompt with true length
+        ``prompt_len`` (traced scalar); ``pages`` is the single-chain pool
+        ``{"k", "v"}: (L, n_pages, page_size, KV, hd)``; ``table`` is this
+        slot's ``(maxp,)`` page table.  The prompt's per-layer KV scatters
+        into logical positions ``[0, T_pad)`` of the slot's pages (pad
+        positions carry garbage but stay masked by the positional validity
+        until overwritten).  Returns ``(logits at prompt_len - 1 (1, V),
+        pages)``.  Single-chain; the engine vmaps it over the bank.
+        """
+        self._require_paged("paged_prefill")
+        T = tokens.shape[1]
+        L, _, ps = pages["k"].shape[:3]
+        if T > table.shape[0] * ps:
+            raise ValueError(
+                f"padded prompt length {T} exceeds the slot's "
+                f"{table.shape[0]} x {ps} paged capacity (raise max_seq, or "
+                "loosen the prompt bucket ladder)")
+        logits, _, (k, v) = self.forward(params, {"tokens": tokens},
+                                         want_kv=True)  # (L, 1, T, KV, hd)
+        last = jax.lax.dynamic_index_in_dim(logits, prompt_len - 1, axis=1,
+                                            keepdims=False)  # (1, V)
+        r = jnp.arange(T)
+        idx = table[r // ps] * ps + r % ps  # logical -> flat physical rows
+        kf = pages["k"].reshape(L, -1, *pages["k"].shape[3:])
+        vf = pages["v"].reshape(L, -1, *pages["v"].shape[3:])
+        return last, {
+            "k": kf.at[:, idx].set(k[:, 0]).reshape(pages["k"].shape),
+            "v": vf.at[:, idx].set(v[:, 0]).reshape(pages["v"].shape),
+        }
+
+    def paged_step(self, params, pages, tables, tokens, positions):
+        """One decode step over the serving slots of a paged pool.
+
+        tokens: (S, 1) int32 — the last token of each slot; tables:
+        (S, maxp) int32; positions: (S,) int32 absolute position each
+        slot's token is written at (the scheduler clamps inactive slots to
+        0 and points their table rows at the garbage page).  Returns
+        (logits (S, 1, V), new pages).  Single-chain; vmapped over the bank.
+        """
+        self._require_paged("paged_step")
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)  # (S, 1, d)
+        block = cfg.block_pattern[0]
+
+        def scan_body(x, inp):
+            layer_p, pg = inp
+            x, new_pg = apply_paged_block(
+                layer_p, x, cfg, block, pg, tables, positions,
+                mesh=self.mesh, batch_axes=self.batch_axes,
+                fsdp_axes=self.fsdp_axes, fused=self.decode_fused,
+                fused_interpret=self.decode_interpret)
+            return x, new_pg
+
+        x, new_pages = jax.lax.scan(scan_body, x, (params["stack"], pages))
+        logits = self.unembed(params, x)
+        return logits, new_pages
 
     def prefill_cache(self, params, tokens, cache, prompt_len):
         """Padded-prompt prefill *into* a persistent decode cache.

@@ -25,6 +25,7 @@ from repro.obs.metrics import Registry, registry  # noqa: F401
 from repro.obs.timeline import (  # noqa: F401
     cluster_timeline,
     decode_timeline,
+    paged_timeline,
     to_chrome_trace,
     write_chrome_trace,
 )

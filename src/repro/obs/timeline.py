@@ -14,6 +14,14 @@ metadata records naming the process/thread rows.  Three producers:
   **staleness**, and batch size.  This is the paper's Figure-1 execution
   diagram, reconstructed from the same ``WorkerSchedule`` arrays the
   executor scans — no extra event collection;
+- :func:`paged_timeline` — a :class:`PagedDecodeEngine` stream: one row per
+  serving *slot* carrying each request's queue wait (submit → admission),
+  its prefill (``paged.admit``), and its residency (``paged.request``,
+  annotated with new-token count and eviction count), plus a scheduler row
+  of ``paged.decode_chunk`` spans showing how many slots each fused step
+  chunk advanced.  Continuous batching is visible at a glance: slot rows
+  stay dense while the waiting queue drains, and an evicted request shows
+  up twice on (possibly) different slot rows;
 - :func:`decode_timeline` — a :class:`DecodeEngine` request stream traced by
   :mod:`repro.obs.trace`: per request, one ``decode.generate`` span (the
   host-measured truth) plus **amortized** prefill/per-token child slices on
@@ -36,8 +44,8 @@ from typing import Optional, Sequence
 
 from repro.obs.trace import iter_spans
 
-__all__ = ["cluster_timeline", "decode_timeline", "to_chrome_trace",
-           "write_chrome_trace"]
+__all__ = ["cluster_timeline", "decode_timeline", "paged_timeline",
+           "to_chrome_trace", "write_chrome_trace"]
 
 _US = 1e6
 
@@ -156,6 +164,58 @@ def decode_timeline(spans, *, pid: int = 0) -> dict:
             t += dur
     for (b, t_), tid in rung_tid.items():
         events.append(_meta(pid, f"rung B{b}xT{t_}", tid))
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def paged_timeline(spans, *, pid: int = 0) -> dict:
+    """``paged.*`` spans → a per-slot continuous-batching timeline.
+
+    One thread row per serving slot, plus a ``scheduler`` row.  Per
+    request: a ``paged.wait`` slice (submission → first prefill start, on
+    the slot that first admitted it), each ``paged.admit`` prefill, and the
+    full ``paged.request`` residency (submission → finish) with
+    ``new_tokens`` / ``evictions`` in ``args``.  ``paged.decode_chunk``
+    spans land on the scheduler row, showing how many slots each fused
+    step chunk advanced.
+    """
+    events = [_meta(pid, "paged")]
+    slots: set = set()
+    admits: dict = defaultdict(list)  # request_id -> [admit span dicts]
+    chunks, requests = [], []
+    for sp in iter_spans(spans):
+        if sp["name"] == "paged.admit":
+            admits[sp["attrs"].get("request_id")].append(sp)
+        elif sp["name"] == "paged.request":
+            requests.append(sp)
+        elif sp["name"] == "paged.decode_chunk":
+            chunks.append(sp)
+    for rid, sps in admits.items():
+        sps.sort(key=lambda sp: sp["t0"])
+        for sp in sps:
+            s = int(sp["attrs"]["slot"])
+            slots.add(s)
+            events.append(_event("paged.admit", sp["t0"], sp["t1"], pid, s,
+                                 dict(sp["attrs"]), cat="paged"))
+    for sp in requests:
+        attrs = dict(sp["attrs"])
+        s = int(attrs["slot"])
+        slots.add(s)
+        first = admits.get(attrs.get("request_id"))
+        if first:  # queue wait: submission until the first prefill starts
+            events.append(_event(
+                "paged.wait", sp["t0"], first[0]["t0"], pid,
+                int(first[0]["attrs"]["slot"]),
+                {"request_id": attrs.get("request_id")}, cat="paged"))
+        events.append(_event("paged.request", sp["t0"], sp["t1"], pid, s,
+                             attrs, cat="paged"))
+    sched = (max(slots) + 1) if slots else 0
+    for sp in chunks:
+        events.append(_event("paged.decode_chunk", sp["t0"], sp["t1"], pid,
+                             sched, dict(sp["attrs"]), cat="paged"))
+    for s in sorted(slots):
+        events.append(_meta(pid, f"slot {s}", s))
+    if chunks:
+        events.append(_meta(pid, "scheduler", sched))
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 
 

@@ -1,0 +1,241 @@
+"""cluster.api: the request-level front door and its compatibility pins.
+
+``ServeEngine.serve`` and ``DecodeEngine.generate`` are thin shims over the
+shared ``submit()``/``drain()`` endpoint — this file pins them **bitwise**
+against the request-level path, pins the unified ``from_checkpoint`` /
+``from_cluster`` constructor surface (including the legacy positional
+order), and covers the Completion/timing contract plus the LRU cap on the
+decode engine's persistent per-rung cache bank."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint
+from repro.cluster import DecodeEngine, ServeEngine
+from repro.cluster.api import (
+    FINISH_LENGTH,
+    FINISH_QUERY,
+    Completion,
+    Request,
+)
+from repro.configs import get_reduced
+from repro.core import PolyRegression
+from repro.models import regression_predict, transformer_next_token_predict
+from repro.models.transformer import Model, init_params
+
+C = 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced("qwen3-4b")
+
+
+@pytest.fixture(scope="module")
+def model(cfg):
+    return Model(cfg, remat=False)
+
+
+@pytest.fixture(scope="module")
+def bank(cfg):
+    return jax.vmap(lambda k: init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), C))
+
+
+@pytest.fixture(scope="module")
+def reg():
+    return PolyRegression.make(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def reg_bank():
+    return jax.random.normal(jax.random.PRNGKey(1), (8, 5))
+
+
+def prompt_batch(b, t, vocab, seed=1):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0,
+                                         vocab, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# shim pinning: batch APIs are bitwise-equal to submit/drain
+# ---------------------------------------------------------------------------
+def test_generate_is_bitwise_equal_to_submit_drain(cfg, model, bank):
+    """The batch-level ``generate`` and the request-level path must produce
+    the same bits: the shim splits rows into Requests and the drain stacks
+    them back into one batch trace."""
+    prompt = prompt_batch(3, 5, cfg.vocab_size)
+    a = DecodeEngine(model=model, params=bank, max_seq=32,
+                     return_logits=True)
+    b = DecodeEngine(model=model, params=bank, max_seq=32,
+                     return_logits=True)
+    res = a.generate(prompt, 6)
+    ids = [b.submit(Request(tokens=prompt[i], max_new_tokens=6))
+           for i in range(prompt.shape[0])]
+    comps = {c.request_id: c for c in b.drain()}
+    assert np.array_equal(np.stack([comps[r].tokens for r in ids]),
+                          res.tokens)
+    assert np.array_equal(np.stack([comps[r].logits for r in ids]),
+                          res.logits)
+    # same grouped batch => same single trace on both engines
+    assert a.num_traces == b.num_traces == 1
+
+
+def test_generate_shim_groups_by_shape_and_key(cfg, model, bank):
+    """Requests sharing (T, max_new, key object) batch together; a request
+    with its own key decodes in its own group, all in one drain."""
+    eng = DecodeEngine(model=model, params=bank, max_seq=32)
+    ref = DecodeEngine(model=model, params=bank, max_seq=32)
+    key = np.asarray(jax.random.PRNGKey(3), np.uint32)
+    p = prompt_batch(2, 5, cfg.vocab_size, seed=2)
+    ids_g = [eng.submit(Request(tokens=p[i], max_new_tokens=4))
+             for i in range(2)]
+    id_s = eng.submit(Request(tokens=p[0], max_new_tokens=4, key=key))
+    comps = {c.request_id: c for c in eng.drain()}
+    want_g = ref.generate(p, 4)
+    want_s = ref.generate(p[:1], 4, key=jnp.asarray(key))
+    assert np.array_equal(np.stack([comps[r].tokens for r in ids_g]),
+                          want_g.tokens)
+    assert np.array_equal(comps[id_s].tokens, want_s.tokens[0])
+
+
+def test_serve_is_bitwise_equal_to_submit_drain(reg, reg_bank):
+    """``serve`` and per-query submit/drain agree bitwise on mean, var and
+    every quantile row."""
+    queries = jax.random.normal(jax.random.PRNGKey(5), (5,))
+    a = ServeEngine(predict_fn=regression_predict(reg), params=reg_bank)
+    b = ServeEngine(predict_fn=regression_predict(reg), params=reg_bank)
+    res = a.serve(queries)
+    ids = [b.submit(Request(tokens=np.asarray(queries[i])))
+           for i in range(5)]
+    comps = {c.request_id: c for c in b.drain()}
+    rows = [comps[r].stats for r in ids]
+    assert np.array_equal(np.stack([r.mean for r in rows]), res.mean)
+    assert np.array_equal(np.stack([r.var for r in rows]), res.var)
+    assert np.array_equal(np.stack([r.quantiles for r in rows], axis=1),
+                          res.quantiles)
+    assert a.num_traces == b.num_traces == 1
+
+
+def test_serve_drain_groups_mixed_query_structures(reg, reg_bank, cfg,
+                                                   model, bank):
+    """A drain holding queries of different trailing shapes batches each
+    structure separately and still answers every request."""
+    eng = ServeEngine(predict_fn=regression_predict(reg), params=reg_bank)
+    scalars = [np.float32(0.1), np.float32(0.7)]
+    ids = [eng.submit(Request(tokens=s)) for s in scalars]
+    comps = {c.request_id: c for c in eng.drain()}
+    ref = ServeEngine(predict_fn=regression_predict(reg), params=reg_bank)
+    want = ref.serve(np.asarray(scalars))
+    for i, rid in enumerate(ids):
+        assert comps[rid].finish_reason == FINISH_QUERY
+        assert np.array_equal(comps[rid].stats.mean, want.mean[i])
+
+
+# ---------------------------------------------------------------------------
+# Request / Completion contract
+# ---------------------------------------------------------------------------
+def test_completion_fields_and_timing(cfg, model, bank):
+    eng = DecodeEngine(model=model, params=bank, max_seq=32)
+    rid = eng.submit(Request(tokens=prompt_batch(1, 5, cfg.vocab_size)[0],
+                             max_new_tokens=3))
+    (comp,) = eng.drain()
+    assert isinstance(comp, Completion)
+    assert comp.request_id == rid
+    assert comp.finish_reason == FINISH_LENGTH
+    assert comp.tokens.shape == (3,) and comp.tokens.dtype == np.int32
+    assert comp.timing["submitted"] <= comp.timing["first_token"] \
+        <= comp.timing["finished"]
+
+
+def test_request_ids_are_unique_and_drain_is_idempotent(cfg, model, bank):
+    eng = DecodeEngine(model=model, params=bank, max_seq=32)
+    p = prompt_batch(2, 4, cfg.vocab_size)
+    r1 = eng.submit(Request(tokens=p[0], max_new_tokens=2))
+    r2 = eng.submit(Request(tokens=p[1], max_new_tokens=2))
+    assert r1 != r2
+    assert len(eng.drain()) == 2
+    assert eng.drain() == []  # nothing pending: a drain is a no-op
+
+
+def test_serve_engine_rejects_decode_requests(reg, reg_bank):
+    eng = ServeEngine(predict_fn=regression_predict(reg), params=reg_bank)
+    with pytest.raises(ValueError, match="decode engine"):
+        eng.submit(Request(tokens=np.float32(0.5), max_new_tokens=4))
+
+
+def test_decode_engine_validates_at_submit(cfg, model, bank):
+    eng = DecodeEngine(model=model, params=bank, max_seq=8)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(tokens=np.zeros((4,), np.int32)))
+    with pytest.raises(ValueError, match="overflows"):
+        eng.submit(Request(tokens=np.zeros((6,), np.int32),
+                           max_new_tokens=5))
+    assert eng._pending == []  # rejected requests never enqueue
+
+
+# ---------------------------------------------------------------------------
+# unified constructor surface
+# ---------------------------------------------------------------------------
+def test_from_checkpoint_unified_and_legacy_orders(cfg, model, bank,
+                                                   tmp_path):
+    """One ``(path, like, front)`` signature across engines, with the
+    legacy ``DecodeEngine.from_checkpoint(path, model, like)`` positional
+    order auto-detected and swapped."""
+    path = str(tmp_path / "bank.npz")
+    save_checkpoint(path, bank)
+    like = jax.tree_util.tree_map(lambda x: x[0], bank)
+    unified = DecodeEngine.from_checkpoint(path, like, model, max_seq=32)
+    legacy = DecodeEngine.from_checkpoint(path, model, like, max_seq=32)
+    kws = DecodeEngine.from_checkpoint(path, like=like, model=model,
+                                       max_seq=32)
+    assert unified.num_chains == legacy.num_chains == kws.num_chains == C
+    p = prompt_batch(2, 5, cfg.vocab_size, seed=8)
+    a = unified.generate(p, 3).tokens
+    assert np.array_equal(a, legacy.generate(p, 3).tokens)
+    assert np.array_equal(a, kws.generate(p, 3).tokens)
+    serve = ServeEngine.from_checkpoint(
+        path, like, transformer_next_token_predict(model), donate=False)
+    assert serve.num_chains == C
+
+
+def test_from_cluster_shared_signature(cfg, model, bank, reg, reg_bank):
+    """``from_cluster(state, front)`` maps ``front`` onto each engine's own
+    front field (model / predict_fn)."""
+    dec = DecodeEngine.from_cluster(bank, model, max_seq=32)
+    srv = ServeEngine.from_cluster(reg_bank, regression_predict(reg))
+    assert dec.num_chains == C and dec._model.cfg is not None
+    assert srv.num_chains == 8
+    p = prompt_batch(2, 4, cfg.vocab_size, seed=9)
+    live = DecodeEngine(model=model, params=bank, max_seq=32)
+    assert np.array_equal(dec.generate(p, 3).tokens,
+                          live.generate(p, 3).tokens)
+
+
+# ---------------------------------------------------------------------------
+# LRU cap on the persistent per-rung cache bank
+# ---------------------------------------------------------------------------
+def test_cache_bank_lru_cap_and_eviction_counter(cfg, model, bank):
+    """``max_cache_rungs`` bounds the persistent KV banks the engine keeps
+    alive; the least-recently-used rung is dropped and counted on the
+    ``decode.bank_evictions`` metric."""
+    eng = DecodeEngine(model=model, params=bank, max_seq=32,
+                       max_cache_rungs=2)
+    before = eng._m_bank_evictions.value
+    eng.generate(prompt_batch(1, 4, cfg.vocab_size), 2)   # rung B=1
+    eng.generate(prompt_batch(2, 4, cfg.vocab_size), 2)   # rung B=2
+    assert set(eng._cache) == {1, 2}
+    eng.generate(prompt_batch(1, 4, cfg.vocab_size), 2)   # touch B=1 (MRU)
+    eng.generate(prompt_batch(4, 4, cfg.vocab_size), 2)   # rung B=4 evicts 2
+    assert set(eng._cache) == {1, 4}
+    assert eng._m_bank_evictions.value == before + 1
+    # the evicted rung re-admits — displacing the now-LRU B=1 bank — and
+    # retraces nothing: traces are per rung shape, cached separately from
+    # the bank buffers
+    traces = eng.num_traces
+    eng.generate(prompt_batch(2, 4, cfg.vocab_size), 2)
+    assert set(eng._cache) == {2, 4}
+    assert eng._m_bank_evictions.value == before + 2
+    assert eng.num_traces == traces

@@ -2,7 +2,7 @@
 the cluster gate (speedup / W2-at-budget / batch-policy advantage), the
 serve gate (QPS floor, p99 ceiling, retrace flag, row presence), and the
 decode gate (tokens/sec floor, per-token p99 ceiling, exact trace-count
-match, sublinearity)."""
+match, sublinearity, and the continuous-batching uplift block)."""
 
 import copy
 import json
@@ -142,6 +142,19 @@ def decode_baseline():
         "sublinear": {"chains": 8, "c1_per_token_ms": 0.8,
                       "sharded_per_token_ms": 1.4, "linear_bound_ms": 6.4,
                       "speedup_vs_linear": 4.57, "pass": True},
+        "continuous": {
+            "config": {"requests": 12, "num_slots": 4, "seed": 2},
+            "static": {"qps": 1.0, "p99_ttft_ms": 9000.0,
+                       "wasted_token_frac": 0.55,
+                       "retraced_in_stream": False,
+                       "pad_allocs_in_stream": 0},
+            "paged": {"qps": 1.5, "p99_ttft_ms": 3000.0,
+                      "page_utilization_mean": 0.5, "traces": 2,
+                      "new_traces_in_stream": 0,
+                      "retraced_in_stream": False,
+                      "pad_allocs_in_stream": 0},
+            "qps_uplift": 1.5, "pass": True,
+        },
     }
 
 
@@ -201,6 +214,59 @@ def test_decode_gate_fails_on_missing_row_and_custom_band(decode_baseline):
     tight["rows"][0]["tokens_per_s"] *= 0.9
     assert check_bench.check(tight, decode_baseline) == []
     assert check_bench.check(tight, decode_baseline, tol_tps=0.05) != []
+
+
+def test_decode_gate_fails_when_continuous_uplift_lost(decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    bad["continuous"]["qps_uplift"] = 0.97
+    bad["continuous"]["pass"] = False
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "lost its sustained-QPS uplift" in msgs[0]
+    # the pass flag gates even if the recorded uplift looks fine
+    bad["continuous"]["qps_uplift"] = 1.4
+    assert len(check_bench.check(bad, decode_baseline)) == 1
+
+
+def test_decode_gate_continuous_wallclock_bands(decode_baseline):
+    ok = copy.deepcopy(decode_baseline)
+    ok["continuous"]["paged"]["qps"] = 1.5 * 0.5       # inside the 75% band
+    ok["continuous"]["paged"]["p99_ttft_ms"] = 3000.0 * 3  # inside the 4x
+    assert check_bench.check(ok, decode_baseline) == []
+    bad = copy.deepcopy(decode_baseline)
+    bad["continuous"]["paged"]["qps"] = 1.5 * 0.2      # below the 25% floor
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "paged QPS regressed" in msgs[0]
+    bad = copy.deepcopy(decode_baseline)
+    bad["continuous"]["paged"]["p99_ttft_ms"] = 3000.0 * 6  # above the 5x
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "p99 TTFT regressed" in msgs[0]
+
+
+def test_decode_gate_continuous_structural_invariants_are_exact(
+        decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    bad["continuous"]["paged"]["traces"] = 3  # no band: extra program
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "paged trace count changed" in msgs[0]
+    bad["continuous"]["paged"]["traces"] = 2
+    bad["continuous"]["paged"]["new_traces_in_stream"] = 1
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "retraced inside the arrival stream" in msgs[0]
+    bad["continuous"]["paged"]["new_traces_in_stream"] = 0
+    bad["continuous"]["static"]["pad_allocs_in_stream"] = 2
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "static server allocated" in msgs[0]
+
+
+def test_decode_gate_continuous_block_must_not_vanish(decode_baseline):
+    bad = copy.deepcopy(decode_baseline)
+    del bad["continuous"]
+    msgs = check_bench.check(bad, decode_baseline)
+    assert len(msgs) == 1 and "has none" in msgs[0]
+    # pre-continuous baselines don't demand the block from fresh runs
+    old = copy.deepcopy(decode_baseline)
+    del old["continuous"]
+    assert check_bench.check(copy.deepcopy(old), old) == []
 
 
 def test_cli_gates_the_committed_decode_baseline_against_itself(tmp_path):

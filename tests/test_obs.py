@@ -31,6 +31,7 @@ from repro.obs.metrics import (
 from repro.obs.timeline import (
     cluster_timeline,
     decode_timeline,
+    paged_timeline,
     summarize,
     validate_chrome_trace,
     write_chrome_trace,
@@ -228,6 +229,83 @@ def test_decode_timeline_amortizes_token_slices():
     assert evs[3]["ts"] == pytest.approx(evs[2]["ts"] + evs[2]["dur"])
     assert all(ev["args"]["amortized"] for ev in evs[1:])
     assert all(ev["args"]["request_span"] == 7 for ev in evs[1:])
+
+
+def test_paged_timeline_per_slot_rows_and_queue_wait():
+    """Slot rows carry prefill + residency, the queue wait is derived from
+    submission to the *first* admit (an evicted request admits twice), and
+    decode chunks land on the scheduler row."""
+    spans = [
+        {"name": "paged.admit", "id": 1, "parent": None, "t0": 1.0,
+         "t1": 1.2, "tid": 9,
+         "attrs": {"slot": 0, "request_id": 41, "T": 5, "t_rung": 8,
+                   "pages": 2}},
+        # request 41 was evicted and re-admitted later on slot 1
+        {"name": "paged.admit", "id": 2, "parent": None, "t0": 2.0,
+         "t1": 2.1, "tid": 9,
+         "attrs": {"slot": 1, "request_id": 41, "T": 5, "t_rung": 8,
+                   "pages": 2}},
+        {"name": "paged.decode_chunk", "id": 3, "parent": None, "t0": 1.2,
+         "t1": 1.5, "tid": 9, "attrs": {"active": 2, "chunk": 4}},
+        {"name": "paged.request", "id": 4, "parent": None, "t0": 0.5,
+         "t1": 2.5, "tid": 9,
+         "attrs": {"slot": 1, "request_id": 41, "new_tokens": 6,
+                   "evictions": 1}},
+    ]
+    trace = paged_timeline(spans)
+    assert validate_chrome_trace(trace) == []
+    evs = {ev["name"]: ev for ev in trace["traceEvents"]
+           if ev.get("ph") == "X"}
+    # wait slice: submission (0.5) until the FIRST prefill start (1.0),
+    # rendered on the first admitting slot's row
+    assert evs["paged.wait"]["ts"] == pytest.approx(0.5e6)
+    assert evs["paged.wait"]["dur"] == pytest.approx(0.5e6)
+    assert evs["paged.wait"]["tid"] == 0
+    assert evs["paged.request"]["tid"] == 1  # finished on slot 1
+    assert evs["paged.request"]["args"]["evictions"] == 1
+    # scheduler row sits above the highest slot row
+    assert evs["paged.decode_chunk"]["tid"] == 2
+    names = {(ev["pid"], ev.get("tid")): ev["args"]["name"]
+             for ev in trace["traceEvents"] if ev.get("ph") == "M"}
+    assert names[(0, 0)] == "slot 0"
+    assert names[(0, 1)] == "slot 1"
+    assert names[(0, 2)] == "scheduler"
+
+
+def test_paged_timeline_from_live_engine():
+    """The spans a real PagedDecodeEngine records export to a valid
+    timeline with one admit per (admission incl. eviction replays) and one
+    residency per completed request."""
+    from repro.cluster import PagedDecodeEngine
+    from repro.cluster.api import Request
+
+    cfg = get_reduced("qwen3-4b")
+    model = Model(cfg, remat=False)
+    bank = jax.vmap(lambda k: init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), 2))
+    tr = tracer().enable()
+    tr.clear()
+    try:
+        eng = PagedDecodeEngine(model=model, params=bank, num_slots=2,
+                                page_size=8, max_seq=32, decode_chunk=4)
+        rng = np.random.default_rng(0)
+        for t, n in [(5, 4), (3, 2), (6, 5)]:
+            eng.submit(Request(
+                tokens=rng.integers(0, cfg.vocab_size, (t,),
+                                    dtype=np.int32), max_new_tokens=n))
+        comps = eng.drain()
+        trace = paged_timeline(tr.drain())
+    finally:
+        tr.disable()
+    assert validate_chrome_trace(trace) == []
+    evs = [ev for ev in trace["traceEvents"] if ev.get("ph") == "X"]
+    by = lambda n: [ev for ev in evs if ev["name"] == n]  # noqa: E731
+    assert len(by("paged.request")) == len(comps) == 3
+    assert len(by("paged.admit")) == 3  # no evictions in this stream
+    assert len(by("paged.wait")) == 3
+    assert len(by("paged.decode_chunk")) >= 1
+    assert {ev["args"]["new_tokens"] for ev in by("paged.request")} \
+        == {4, 2, 5}
 
 
 def test_to_chrome_trace_and_summarize_roundtrip(tmp_path):
