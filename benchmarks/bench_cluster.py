@@ -50,6 +50,7 @@ from repro.cluster import (
     w2_recorder,
 )
 from repro.core import (
+    FaultPlan,
     Quadratic,
     WorkerModel,
     simulate_async,
@@ -58,6 +59,7 @@ from repro.core import (
     truncate_to_evals,
 )
 from repro.data import ar1_stream
+from repro.faults import nan_storm
 from repro.obs import cluster_timeline, registry, write_chrome_trace
 from repro import samplers
 
@@ -307,6 +309,109 @@ def run_scenarios(num_chains: int = 64, workers: int = 8,
     }
 
 
+def run_chaos(num_chains: int = 64, workers: int = 8, commits: int = 960,
+              d: int = 2, gamma: float = 0.05, sigma: float = 0.5,
+              n_target: int = 256, seed: int = 0, chunks: int = 16,
+              crash_rate: float = 0.15, mean_downtime: float = 2.0,
+              pause_rate: float = 0.1, mean_pause: float = 1.0,
+              poison_rate: float = 0.005) -> dict:
+    """Self-healing under chaos: W2-at-budget through crashes, pauses, and
+    NaN-poisoned chains vs the fault-free arm on the same harness.
+
+    The clean arm is plain async SGLD on fault-free worker schedules.  The
+    storm arm draws its schedules from the same :class:`WorkerModel` with a
+    :class:`FaultPlan` (workers crash mid-flight and rejoin after an
+    exponential downtime, losing every commit in transit; pauses stretch
+    staleness without losing work), NaN-poisons a seeded ``poison_rate``
+    fraction of (commit, chain) slots via :func:`repro.faults.nan_storm`,
+    and runs with ``health_check=True`` so poisoned chains are quarantined
+    on device and respawned from healthy donors at chunk boundaries.  Both
+    arms record the same debiased-Sinkhorn W2 frontier against the same
+    closed-form Gibbs target, so the storm-vs-clean W2 ratio *is* the cost
+    of the faults — ``check_bench.py`` gates the storm W2 inside a band of
+    the clean arm, and the fault accounting (lost commits, poison events,
+    respawns, final healthy count) exactly: the injection is seeded and
+    deterministic, so any drift is a code change, not noise.  Each arm must
+    also stay a single compiled program (``traces_in_run``): fault handling
+    is masking and host-side bookkeeping, never a retrace.
+    """
+    quad = Quadratic.make(jax.random.PRNGKey(seed), d=d, m=1.0, L=3.0)
+    target = _target_samples(quad, sigma, n_target, seed + 1)
+    grad = lambda p, b: quad.grad(p, b)  # noqa: E731
+
+    plan = FaultPlan(crash_rate=crash_rate, mean_downtime=mean_downtime,
+                     pause_rate=pause_rate, mean_pause=mean_pause)
+    scheds_clean = ensemble_async(
+        WorkerModel(num_workers=workers, seed=seed),
+        commits, num_chains, seed=seed)
+    scheds_storm = ensemble_async(
+        WorkerModel(num_workers=workers, seed=seed, faults=plan),
+        commits, num_chains, seed=seed)
+    # crashed-and-rejoined workers read much staler iterates than a healthy
+    # pool: the ring must fit the storm arm's realized staleness
+    tau = max(max(s.max_delay for s in scheds_clean),
+              max(s.max_delay for s in scheds_storm), 1)
+    chunk = max(1, commits // chunks)
+    poison = nan_storm(commits, num_chains, rate=poison_rate, seed=seed + 7)
+
+    def arm(scheds, *, health_check, poison=None):
+        sampler = samplers.sgld("consistent", grad, gamma=gamma, sigma=sigma,
+                                tau=tau)
+        hook = w2_recorder(target, every=chunk, num_iters=100)
+        engine = ClusterEngine(sampler, num_chains=num_chains,
+                               chunk_size=chunk, hooks=[hook],
+                               health_check=health_check)
+        state = engine.init(jnp.zeros(d), jax.random.PRNGKey(seed + 2),
+                            jitter=2.0)
+        t0 = time.time()
+        with instrument() as rep:
+            state, _ = engine.run(state, steps=commits, schedule=scheds,
+                                  poison=poison)
+            jax.block_until_ready(state.params)
+        return hook.record, time.time() - t0, rep.num_traces, state
+
+    clean_rec, clean_s, clean_traces, _ = arm(scheds_clean,
+                                              health_check=False)
+    respawn0 = registry().counter(
+        "chains.respawned",
+        "quarantined chains respawned from a healthy donor").value
+    storm_rec, storm_s, storm_traces, storm_state = arm(
+        scheds_storm, health_check=True, poison=poison)
+    respawned = registry().get("chains.respawned").value - respawn0
+
+    lost = int(sum(s.num_lost for s in scheds_storm))
+    w2_clean = clean_rec[-1]["w2"]
+    w2_storm = storm_rec[-1]["w2"]
+    health = getattr(storm_state, "health", None)
+    return {
+        "config": {"num_chains": num_chains, "workers": workers,
+                   "commits": commits, "d": d, "gamma": gamma,
+                   "sigma": sigma, "tau_realized": tau,
+                   "n_target": n_target, "seed": seed,
+                   "crash_rate": crash_rate, "mean_downtime": mean_downtime,
+                   "pause_rate": pause_rate, "mean_pause": mean_pause,
+                   "poison_rate": poison_rate},
+        "clean": _policy_curves(clean_rec),
+        "storm": _policy_curves(storm_rec),
+        "final_w2_clean": w2_clean,
+        "final_w2_storm": w2_storm,
+        "w2_storm_over_clean": round(w2_storm / w2_clean, 3),
+        "lost_commits": lost,
+        "lost_frac": round(lost / (commits * num_chains), 4),
+        "poison_events": int(poison.sum()),
+        "respawned": int(respawned),
+        "chains_healthy_final": (int(np.asarray(health).sum())
+                                 if health is not None else num_chains),
+        "device_wall_s": {"clean": round(clean_s, 3),
+                          "storm": round(storm_s, 3)},
+        "traces_in_run": {"clean": clean_traces, "storm": storm_traces},
+        # storm-arm commit spans with crashed commits marked "commit
+        # (lost)" — recovery is visible in Perfetto (popped into
+        # <out>.chaos_timeline.json before the payload is written)
+        "timeline": cluster_timeline(scheds_storm),
+    }
+
+
 def run(num_chains: int = 64, workers: int = 8, commits: int = 960,
         d: int = 2, gamma: float = 0.05, sigma: float = 0.5,
         n_target: int = 256, seed: int = 0, chunks: int = 16):
@@ -366,6 +471,7 @@ def _row(result: dict) -> dict:
     us = result["device_wall_s"]["async"] / result["config"]["commits"] * 1e6
     bp = result.get("batch_policy", {})
     scen = result.get("scenarios", {}).get("rows", {})
+    ch = result.get("chaos")
     return {
         "bench": "cluster", "us_per_call": round(us, 1),
         "chains": result["config"]["num_chains"],
@@ -376,6 +482,8 @@ def _row(result: dict) -> dict:
         "het_wallclock_advantage": bp.get("het_wallclock_advantage"),
         "scenario_w2": {name: round(r["final_w2"], 4)
                         for name, r in scen.items()},
+        "chaos_w2_storm": (round(ch["final_w2_storm"], 4) if ch else None),
+        "chaos_w2_ratio": (ch.get("w2_storm_over_clean") if ch else None),
     }
 
 
@@ -384,6 +492,8 @@ SMOKE_POLICY_KW = dict(num_chains=8, workers=4, fixed_commits=240, chunks=24,
                        n_target=128)
 SMOKE_SCENARIO_KW = dict(num_chains=8, workers=4, commits=240, chunks=24,
                          n_target=128, anchor_every=48)
+SMOKE_CHAOS_KW = dict(num_chains=8, workers=4, commits=240, chunks=24,
+                      n_target=128)
 
 
 def full(fast: bool = True) -> dict:
@@ -392,44 +502,96 @@ def full(fast: bool = True) -> dict:
         **(SMOKE_POLICY_KW if fast else {}))
     result["scenarios"] = run_scenarios(
         **(SMOKE_SCENARIO_KW if fast else {}))
+    result["chaos"] = run_chaos(**(SMOKE_CHAOS_KW if fast else {}))
     return result
+
+
+def chaos_only(fast: bool = True) -> dict:
+    """The chaos-smoke CI payload: just the clean-vs-storm arm pair, with
+    a ``kind`` marker so ``check_bench.py`` dispatches the chaos gate."""
+    return {"kind": "cluster-chaos",
+            "chaos": run_chaos(**(SMOKE_CHAOS_KW if fast else {}))}
 
 
 def main(fast: bool = True):
     return [_row(full(fast))]
 
 
+#: in-run acceptance band for the storm arm: its W2-at-budget must stay
+#: within CHAOS_W2_FACTOR x the fault-free arm's, with an absolute floor so
+#: a very tight clean W2 cannot make the band impossibly narrow
+#: (scripts/check_bench.py applies the same band against the baseline)
+#: (at smoke scale the healed storm arm lands at ~0.9x the clean W2 — the
+#: respawned chains clone healthy donors, so the faults cost commits, not
+#: mixing; 2x headroom flags a broken quarantine long before NaN)
+CHAOS_W2_FACTOR = 2.0
+CHAOS_W2_FLOOR = 0.8
+
+
+def _check_chaos_gate(ch: dict) -> None:
+    w2c, w2s = ch["final_w2_clean"], ch["final_w2_storm"]
+    if not w2s == w2s:  # NaN guard
+        raise SystemExit("storm-arm W2 is NaN: the quarantine/respawn path "
+                         "failed to keep the ensemble finite")
+    band = max(CHAOS_W2_FACTOR * w2c, CHAOS_W2_FLOOR)
+    if w2s > band:
+        raise SystemExit(
+            f"storm-arm W2 {w2s:.4f} left the self-healing band "
+            f"{band:.4f} (clean {w2c:.4f} x {CHAOS_W2_FACTOR}, floor "
+            f"{CHAOS_W2_FLOOR})")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (8 chains, 240 commits)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos-smoke payload only (fault-free vs "
+                    "crash/pause/NaN-storm arm, self-healing on)")
     ap.add_argument("--out", default="BENCH_cluster.json")
     args = ap.parse_args()
-    result = full(args.smoke)
     stem = args.out[:-5] if args.out.endswith(".json") else args.out
-    write_chrome_trace(f"{stem}.timeline.json", result.pop("timeline"))
+    if args.chaos:
+        result = chaos_only(args.smoke)
+    else:
+        result = full(args.smoke)
+        write_chrome_trace(f"{stem}.timeline.json", result.pop("timeline"))
+    write_chrome_trace(f"{stem}.chaos_timeline.json",
+                       result["chaos"].pop("timeline"))
     registry().write_snapshot(f"{stem}.metrics.json")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
-    print(json.dumps(_row(result)))
-    bp = result["batch_policy"]
-    print(f"batch policies at {bp['config']['budget_grad_evals']} grad evals"
-          f"/chain: fixed W2 {bp['final_w2_fixed']:.4f} in "
-          f"{bp['wallclock_fixed']:.1f} sim-units, inverse-speed W2 "
-          f"{bp['final_w2_het']:.4f} in {bp['wallclock_het']:.1f} "
-          f"(reached fixed's final W2 at "
-          f"{bp['het_time_to_fixed_final_w2'] or float('nan'):.1f}; "
-          f"advantage {bp['het_wallclock_advantage']}x)")
-    scen = result["scenarios"]
-    print(f"scenario matrix at {scen['config']['budget_grad_evals']} grad "
-          "evals/chain: " + ", ".join(
-              f"{name} W2 {r['final_w2']:.4f}"
-              for name, r in scen["rows"].items()))
-    print(f"wrote {args.out} (+ .timeline.json, .metrics.json)")
-    if result["speedup_vs_sync"] <= 1.0:
-        raise SystemExit("async-vs-sync speedup did not exceed 1")
-    adv = bp["het_wallclock_advantage"]
-    if adv is None or adv <= 1.0:
-        raise SystemExit(
-            "inverse-speed batching did not reach the fixed-batch final W2 "
-            f"in less simulated wall clock (advantage {adv})")
+    if not args.chaos:
+        print(json.dumps(_row(result)))
+        bp = result["batch_policy"]
+        print(f"batch policies at {bp['config']['budget_grad_evals']} grad "
+              f"evals/chain: fixed W2 {bp['final_w2_fixed']:.4f} in "
+              f"{bp['wallclock_fixed']:.1f} sim-units, inverse-speed W2 "
+              f"{bp['final_w2_het']:.4f} in {bp['wallclock_het']:.1f} "
+              f"(reached fixed's final W2 at "
+              f"{bp['het_time_to_fixed_final_w2'] or float('nan'):.1f}; "
+              f"advantage {bp['het_wallclock_advantage']}x)")
+        scen = result["scenarios"]
+        print(f"scenario matrix at {scen['config']['budget_grad_evals']} "
+              "grad evals/chain: " + ", ".join(
+                  f"{name} W2 {r['final_w2']:.4f}"
+                  for name, r in scen["rows"].items()))
+    ch = result["chaos"]
+    print(f"chaos: clean W2 {ch['final_w2_clean']:.4f} vs storm "
+          f"{ch['final_w2_storm']:.4f} "
+          f"({ch['w2_storm_over_clean']}x) with {ch['lost_commits']} "
+          f"commits lost ({ch['lost_frac']:.1%}), "
+          f"{ch['poison_events']} NaN poisons, {ch['respawned']} respawns, "
+          f"{ch['chains_healthy_final']}/{ch['config']['num_chains']} "
+          f"chains healthy at budget")
+    print(f"wrote {args.out} (+ .metrics.json, .chaos_timeline.json"
+          + (")" if args.chaos else ", .timeline.json)"))
+    if not args.chaos:
+        if result["speedup_vs_sync"] <= 1.0:
+            raise SystemExit("async-vs-sync speedup did not exceed 1")
+        adv = result["batch_policy"]["het_wallclock_advantage"]
+        if adv is None or adv <= 1.0:
+            raise SystemExit(
+                "inverse-speed batching did not reach the fixed-batch "
+                f"final W2 in less simulated wall clock (advantage {adv})")
+    _check_chaos_gate(ch)

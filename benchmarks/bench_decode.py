@@ -35,7 +35,12 @@ import numpy as np
 
 from repro.analysis import instrument
 from repro.cluster import DecodeEngine, PagedDecodeEngine
-from repro.cluster.api import Request
+from repro.cluster.api import (
+    Request,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+)
 from repro.configs import get_reduced
 from repro.models.transformer import Model, init_params
 from repro.obs import (
@@ -226,10 +231,90 @@ def _measure_continuous(model, params, *, requests: int, num_slots: int,
     }
 
 
+def _measure_deadline(model, params, *, requests: int, num_slots: int,
+                      prompt_len: int, max_new: int, max_seq: int,
+                      page_size: int, decode_chunk: int, seed: int) -> dict:
+    """Deadline-aware shedding under burst overload: goodput of a
+    deadline-armed paged server vs the same server with no deadlines.
+
+    All ``requests`` arrive at once into ``num_slots`` slots — an overload
+    spike where queueing delay, not service time, dominates the tail.  The
+    no-deadline arm serves the whole backlog; a request counts toward
+    *goodput* only if it finished within the budget D of its submission.
+    D self-calibrates to the median completion latency of that arm, so the
+    comparison tracks this machine's service rate instead of hard-coding a
+    wall-clock number.  The deadline arm resubmits the identical burst with
+    ``deadline_ms=D``: requests past D while still waiting are shed
+    un-admitted (``STATUS_SHED``, zero wasted decode) and active ones are
+    cut short with their partial prefix (``STATUS_TIMEOUT``), so no slot
+    keeps burning on a request that already missed its budget.  Acceptance:
+    on-time completions per second of server busy time must go *up* when
+    shedding is on (``goodput_uplift > 1``), every request must come back
+    with a terminal status, and neither arm may trace inside the stream —
+    deadline handling is host-side bookkeeping, never a recompile.
+    """
+    cfg = model.cfg
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(prompt_len,),
+                            dtype=np.int32) for _ in range(requests)]
+    budgets = rng.integers(max(2, max_new // 2), max_new + 1, size=requests)
+
+    def serve(deadline_ms):
+        peng = PagedDecodeEngine(model=model, params=params,
+                                 num_slots=num_slots, page_size=page_size,
+                                 max_seq=max_seq, decode_chunk=decode_chunk)
+        peng.submit(Request(tokens=prompts[0], max_new_tokens=max_new))
+        peng.drain()  # warm the prefill rung + the step body off the clock
+        warm = peng.num_traces
+        reqs = [Request(tokens=prompts[i], max_new_tokens=int(budgets[i]),
+                        deadline_ms=deadline_ms) for i in range(requests)]
+        t0 = time.time()
+        with instrument() as rep:
+            for r in reqs:
+                peng.submit(r)
+            comps = peng.drain()
+        makespan = time.time() - t0
+        lat = [r.timing["finished"] - r.timing["submitted"] for r in reqs]
+        return comps, lat, makespan, rep.stream_flags(), \
+            peng.num_traces - warm
+
+    comps0, lat0, span0, flags0, new_tr0 = serve(None)
+    deadline_ms = round(float(np.percentile(lat0, 50)) * 1e3, 3)
+    comps1, _, span1, flags1, new_tr1 = serve(deadline_ms)
+
+    n_status = lambda cs, st: sum(c.status == st for c in cs)  # noqa: E731
+    on_time0 = sum(lt <= deadline_ms * 1e-3 for lt in lat0)
+    ok1 = n_status(comps1, STATUS_OK)
+    shed1 = n_status(comps1, STATUS_SHED)
+    timeout1 = n_status(comps1, STATUS_TIMEOUT)
+    goodput0 = on_time0 / span0
+    goodput1 = ok1 / span1
+    uplift = round(goodput1 / goodput0, 3) if goodput0 else None
+    return {
+        "config": {"requests": requests, "num_slots": num_slots,
+                   "prompt_len": prompt_len, "max_new": max_new,
+                   "max_seq": max_seq, "page_size": page_size,
+                   "decode_chunk": decode_chunk, "seed": seed},
+        "deadline_ms": deadline_ms,
+        "no_deadline": {"makespan_s": round(span0, 4),
+                        "completed": len(comps0), "on_time": int(on_time0),
+                        "goodput_rps": round(goodput0, 2),
+                        "new_traces_in_stream": new_tr0, **flags0},
+        "deadline": {"makespan_s": round(span1, 4), "ok": ok1,
+                     "shed": shed1, "timeout": timeout1,
+                     "goodput_rps": round(goodput1, 2),
+                     "new_traces_in_stream": new_tr1, **flags1},
+        "goodput_uplift": uplift,
+        "pass": (uplift is not None and uplift > 1.0
+                 and ok1 + shed1 + timeout1 == requests),
+    }
+
+
 def run(chain_sweep=(1, 4, 8), shard_sweep=(4, 8), requests: int = 40,
         max_batch: int = 8, max_prompt: int = 16, max_new: int = 16,
         max_seq: int = 64, seed: int = 0,
-        continuous_kw: dict | None = None) -> dict:
+        continuous_kw: dict | None = None,
+        deadline_kw: dict | None = None) -> dict:
     cfg = _bench_cfg()
     model = Model(cfg, remat=False)
     kw = dict(requests=requests, max_batch=max_batch, max_prompt=max_prompt,
@@ -276,6 +361,14 @@ def run(chain_sweep=(1, 4, 8), shard_sweep=(4, 8), requests: int = 40,
         tr.disable()
     paged_tl = paged_timeline(tr.drain())
 
+    # deadline-aware shedding on the same paged engine: burst overload,
+    # self-calibrating budget (see _measure_deadline)
+    dl_kw = dict(requests=16, num_slots=4, prompt_len=4, max_new=64,
+                 max_seq=128, page_size=8, decode_chunk=8, seed=seed + 3)
+    dl_kw.update(deadline_kw or {})
+    deadline = _measure_deadline(model, _bank(cfg, max(chain_sweep), seed),
+                                 **dl_kw)
+
     # acceptance: sharded C-chain decode is sublinear in C — C=8 over 8
     # devices must beat 8x the C=1 per-token cost
     sublinear = None
@@ -302,6 +395,7 @@ def run(chain_sweep=(1, 4, 8), shard_sweep=(4, 8), requests: int = 40,
         "rows": rows,
         "sublinear": sublinear,
         "continuous": continuous,
+        "deadline": deadline,
         # per-request decode.generate spans with amortized token slices
         # (popped into <out>.timeline.json before the payload is written)
         "timeline": timeline,
@@ -321,11 +415,13 @@ def _row(result: dict) -> dict:
         "per_token_p99_ms": best["per_token_p99_ms"],
         "traces": best["traces"],
         "cont_qps_uplift": result["continuous"]["qps_uplift"],
+        "deadline_goodput_uplift": result["deadline"]["goodput_uplift"],
     }
 
 
 SMOKE_KW = dict(chain_sweep=(1, 8), shard_sweep=(8,), requests=12,
-                max_batch=4, max_prompt=8, max_new=8, max_seq=32)
+                max_batch=4, max_prompt=8, max_new=8, max_seq=32,
+                deadline_kw=dict(requests=10, max_new=32, max_seq=64))
 
 
 def main(fast: bool = True):
@@ -365,6 +461,17 @@ if __name__ == "__main__":
           f"(p99 TTFT {cont['static']['p99_ttft_ms']}ms, "
           f"{cont['static']['wasted_token_frac']:.0%} tokens wasted): "
           f"{cont['qps_uplift']}x uplift")
+    dl = result["deadline"]
+    print(f"  deadline: D={dl['deadline_ms']:.0f}ms burst of "
+          f"{dl['config']['requests']}: no-deadline "
+          f"{dl['no_deadline']['on_time']} on time in "
+          f"{dl['no_deadline']['makespan_s']:.2f}s "
+          f"({dl['no_deadline']['goodput_rps']} rps) vs shedding "
+          f"{dl['deadline']['ok']} ok / {dl['deadline']['shed']} shed / "
+          f"{dl['deadline']['timeout']} cut in "
+          f"{dl['deadline']['makespan_s']:.2f}s "
+          f"({dl['deadline']['goodput_rps']} rps): "
+          f"{dl['goodput_uplift']}x goodput")
     print(f"wrote {args.out} (+ .timeline.json, .paged_timeline.json, "
           ".metrics.json)")
     if any(r["retraced_in_stream"] for r in result["rows"]):
@@ -392,3 +499,12 @@ if __name__ == "__main__":
             cont["static"]["pad_allocs_in_stream"]:
         raise SystemExit("host pad scratch allocated inside the arrival "
                          "stream instead of reusing the per-rung buffer")
+    if not dl["pass"]:
+        raise SystemExit(
+            "deadline shedding did not raise goodput under burst overload "
+            f"({dl['goodput_uplift']}x <= 1, or a request came back "
+            "without a terminal status)")
+    if dl["deadline"]["new_traces_in_stream"] or \
+            dl["no_deadline"]["new_traces_in_stream"]:
+        raise SystemExit("paged engine retraced inside the deadline burst "
+                         "(deadline handling must stay host-side)")

@@ -18,7 +18,13 @@ Cluster gate (simulated, machine-independent — keep the bands tight):
   the fixed-batch final W2 at equal grad evals) must stay > 1;
 - every sampler-zoo scenario row the baseline records (``scenarios.rows``:
   sgld / svrg / stale / sghmc / ar1) must still be present, non-NaN, and
-  its ``final_w2`` may not rise more than ``--tol-w2`` above the baseline.
+  its ``final_w2`` may not rise more than ``--tol-w2`` above the baseline;
+- wherever the baseline records a ``chaos`` block (also shipped standalone
+  as a ``kind: cluster-chaos`` payload by ``bench_cluster.py --chaos``),
+  the fault-injected storm arm must keep a finite W2 inside a band of the
+  fault-free arm and of the baseline, with the seeded fault accounting
+  (lost commits, NaN poisons, respawns, final healthy-chain count) and the
+  per-arm trace counts matched exactly.
 
 Serve gate (wall-clock, machine-dependent — the bands are wide because CI
 runners differ in absolute throughput; order-of-magnitude regressions, e.g.
@@ -46,7 +52,11 @@ absolute speed; the *structural* invariants below are exact):
   must keep its sustained-QPS uplift over the convoyed static baseline
   (uplift > 1, exact), hold the paged QPS floor / p99-TTFT ceiling inside
   the same wall-clock bands, keep the paged trace count exact, and show
-  zero in-stream traces and zero host pad allocations on either server.
+  zero in-stream traces and zero host pad allocations on either server;
+- wherever the baseline records a ``deadline`` block, deadline shedding
+  must keep its goodput uplift over the no-deadline arm under burst
+  overload (relative, so machine speed cancels), return a terminal status
+  for every request, and stay trace-free inside both bursts.
 
 The structural fields the exact gates read (``traces``,
 ``retraced_in_stream``, ``pad_allocs_in_stream``) are produced by the
@@ -72,6 +82,59 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+#: storm-arm W2 acceptance band, mirrored from benchmarks/bench_cluster.py
+#: (this script stays stdlib-only, so the constants are duplicated — keep
+#: them in sync with CHAOS_W2_FACTOR / CHAOS_W2_FLOOR there)
+CHAOS_W2_FACTOR = 2.0
+CHAOS_W2_FLOOR = 0.8
+
+
+def check_chaos(cur: dict | None, base: dict, *, tol_w2: float) -> list[str]:
+    """Chaos-arm regressions (empty list = pass).
+
+    The storm arm (worker crashes + pauses + NaN-poisoned chains, with
+    quarantine/respawn on) must keep a finite W2 inside a band of the
+    fault-free arm on the same harness and inside the usual tolerance of
+    the committed baseline.  The fault *accounting* — lost commits, poison
+    events, respawns, final healthy-chain count — and the per-arm trace
+    counts are gated exactly: the injection is seeded and deterministic,
+    so any drift there is a code change, not machine noise.
+    """
+    if cur is None:
+        return ["chaos: baseline records a chaos block but the fresh "
+                "benchmark has none"]
+    failures = []
+    w2c, w2s = cur["final_w2_clean"], cur["final_w2_storm"]
+    if not w2s == w2s:  # NaN guard: NaN compares false everywhere
+        failures.append("chaos: storm-arm W2 is NaN (the quarantine/respawn "
+                        "path failed to keep the ensemble finite)")
+    else:
+        band = max(CHAOS_W2_FACTOR * w2c, CHAOS_W2_FLOOR)
+        if w2s > band:
+            failures.append(
+                f"chaos: storm-arm W2 {w2s:.4f} left the self-healing band "
+                f"{band:.4f} (clean {w2c:.4f} x {CHAOS_W2_FACTOR}, floor "
+                f"{CHAOS_W2_FLOOR})")
+        ceil = base["final_w2_storm"] * (1.0 + tol_w2)
+        if w2s > ceil:
+            failures.append(
+                f"chaos: storm-arm W2 regressed: {w2s:.4f} > {ceil:.4f} "
+                f"(baseline {base['final_w2_storm']:.4f}, "
+                f"tolerance {tol_w2:.0%})")
+    for key in ("lost_commits", "poison_events", "respawned",
+                "chains_healthy_final"):
+        if cur.get(key) != base.get(key):
+            failures.append(
+                f"chaos: {key} changed: {cur.get(key)} != baseline "
+                f"{base.get(key)} (fault injection is seeded and "
+                "deterministic — drift here is a code change)")
+    if cur["traces_in_run"] != base["traces_in_run"]:
+        failures.append(
+            f"chaos: per-arm trace count changed: {cur['traces_in_run']} "
+            f"!= baseline {base['traces_in_run']} (fault handling must be "
+            "masking + host bookkeeping, never a retrace)")
+    return failures
 
 
 def check_cluster(current: dict, baseline: dict, *, tol_speedup: float,
@@ -119,6 +182,9 @@ def check_cluster(current: dict, baseline: dict, *, tol_speedup: float,
                     f"scenario {name!r}: W2-at-budget regressed: "
                     f"{w2:.4f} > {ceil:.4f} (baseline {w20:.4f}, "
                     f"tolerance {tol_w2:.0%})")
+    if baseline.get("chaos") is not None:
+        failures.extend(check_chaos(current.get("chaos"), baseline["chaos"],
+                                    tol_w2=tol_w2))
     return failures
 
 
@@ -209,6 +275,40 @@ def check_decode(current: dict, baseline: dict, *, tol_tps: float,
         failures.extend(_check_continuous(current.get("continuous"),
                                           baseline["continuous"],
                                           tol_tps=tol_tps, tol_p99=tol_p99))
+    if baseline.get("deadline") is not None:
+        failures.extend(_check_deadline(current.get("deadline")))
+    return failures
+
+
+def _check_deadline(dl: dict | None) -> list[str]:
+    """Deadline-shedding gate: under the benchmark's burst overload, the
+    deadline-armed paged server must raise goodput over the no-deadline
+    arm (relative, so machine speed cancels), account for every request
+    with a terminal status, and never trace inside either burst — the
+    structural facts, not the wall-clock numbers, are the contract."""
+    if dl is None:
+        return ["deadline: baseline records a deadline-shedding block but "
+                "the fresh benchmark has none"]
+    failures = []
+    arm = dl["deadline"]
+    served = arm["ok"] + arm["shed"] + arm["timeout"]
+    if served != dl["config"]["requests"]:
+        failures.append(
+            f"deadline: {served} terminal statuses for "
+            f"{dl['config']['requests']} requests (every submitted request "
+            "must come back ok, shed, or timeout)")
+    if not dl.get("pass") or (dl["goodput_uplift"] or 0) <= 1.0:
+        failures.append(
+            "deadline: shedding lost its goodput uplift under burst "
+            f"overload: {dl['goodput_uplift']}x <= 1 (on-time completions "
+            "per second of busy time must go up when deadlines are armed)")
+    for name in ("deadline", "no_deadline"):
+        if dl[name].get("new_traces_in_stream") \
+                or dl[name].get("retraced_in_stream"):
+            failures.append(
+                f"deadline: paged engine traced inside the {name} burst "
+                f"({dl[name].get('new_traces_in_stream')} new traces — "
+                "deadline handling must stay host-side)")
     return failures
 
 
@@ -265,8 +365,11 @@ def check(current: dict, baseline: dict, *, tol_speedup: float = 0.20,
           tol_w2: float = 0.50, tol_qps: float = 0.75,
           tol_p99: float = 4.0, tol_tps: float = 0.75) -> list[str]:
     """Returns human-readable regression messages (empty = pass); dispatches
-    on the payload kind (decode payloads declare ``kind``, serve payloads
-    carry ``rows``)."""
+    on the payload kind (decode and chaos-only payloads declare ``kind``,
+    serve payloads carry ``rows``)."""
+    if current.get("kind") == "cluster-chaos":
+        return check_chaos(current.get("chaos"), baseline["chaos"],
+                           tol_w2=tol_w2)
     if current.get("kind") == "decode":
         return check_decode(current, baseline, tol_tps=tol_tps,
                             tol_p99=tol_p99)
@@ -277,7 +380,17 @@ def check(current: dict, baseline: dict, *, tol_speedup: float = 0.20,
                          tol_w2=tol_w2)
 
 
+def _chaos_line(ch: dict, ch0: dict) -> str:
+    return (f"chaos: clean W2 {ch['final_w2_clean']:.4f} storm "
+            f"{ch['final_w2_storm']:.4f} (baseline storm "
+            f"{ch0['final_w2_storm']:.4f}), {ch['lost_commits']} commits "
+            f"lost, {ch['poison_events']} poisons, {ch['respawned']} "
+            f"respawns, {ch['chains_healthy_final']} chains healthy")
+
+
 def _summary(current: dict, baseline: dict) -> str:
+    if current.get("kind") == "cluster-chaos":
+        return _chaos_line(current["chaos"], baseline["chaos"])
     if current.get("kind") == "decode":
         cur, base = _serve_rows(current), _serve_rows(baseline)
         parts = []
@@ -296,6 +409,14 @@ def _summary(current: dict, baseline: dict) -> str:
             parts.append(f"continuous: {got} (baseline uplift "
                          f"{cont0['qps_uplift']}x, paged "
                          f"{cont0['paged']['qps']:.2f} qps)")
+        dl, dl0 = current.get("deadline"), baseline.get("deadline")
+        if dl0 is not None:
+            got = (f"goodput uplift {dl['goodput_uplift']}x "
+                   f"({dl['deadline']['ok']} ok / {dl['deadline']['shed']} "
+                   f"shed / {dl['deadline']['timeout']} cut)" if dl
+                   else "MISSING")
+            parts.append(f"deadline: {got} (baseline uplift "
+                         f"{dl0['goodput_uplift']}x)")
         return "\n".join(parts)
     if "rows" in current:
         cur, base = _serve_rows(current), _serve_rows(baseline)
@@ -320,6 +441,8 @@ def _summary(current: dict, baseline: dict) -> str:
             f"{rows[name]['final_w2'] if name in rows else float('nan'):.4f}"
             f" (baseline {rows0[name]['final_w2']:.4f})"
             for name in sorted(rows0))
+    if baseline.get("chaos") is not None and current.get("chaos") is not None:
+        line += "\n" + _chaos_line(current["chaos"], baseline["chaos"])
     return line
 
 

@@ -1,4 +1,5 @@
 from repro.checkpoint.io import (  # noqa: F401
+    CorruptCheckpointError,
     checkpoint_step,
     restore_checkpoint,
     restore_ensemble,

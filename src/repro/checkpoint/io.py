@@ -1,13 +1,18 @@
 """Checkpointing: flat-path npz save/restore for arbitrary pytrees.
 
 Ring-buffer aware: the SGLD delay history is part of the sampler state and
-round-trips like any other leaf.  Writes are atomic (tmp + rename).
+round-trips like any other leaf.  Writes are atomic (tmp + rename), and
+every leaf carries a CRC32 in the manifest: a truncated or bit-flipped
+file raises a loud :class:`CorruptCheckpointError` naming the damaged leaf
+instead of a cryptic numpy failure deep in a restore.
 """
 
 from __future__ import annotations
 
 import os
 import tempfile
+import zipfile
+import zlib
 from typing import Any
 
 import jax
@@ -22,6 +27,16 @@ _SEP = "##"
 # banks — are stored viewed as uint16 plus a manifest of their paths.
 _BF16 = np.dtype(jnp.bfloat16)
 _BF16_KEY = "__bf16__"
+# per-leaf integrity manifest: parallel arrays of flat paths and the CRC32
+# of each leaf's stored bytes (computed on the uint16 view for bf16 leaves)
+_CRC_PATHS_KEY = "__crc_paths__"
+_CRC_VALS_KEY = "__crc_vals__"
+_META_KEYS = ("__step__", _BF16_KEY, _CRC_PATHS_KEY, _CRC_VALS_KEY)
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint file is unreadable or fails its integrity manifest
+    (truncated write, bit flip, damaged zip member)."""
 
 
 def _flatten_paths(tree: PyTree) -> dict[str, np.ndarray]:
@@ -35,6 +50,10 @@ def _flatten_paths(tree: PyTree) -> dict[str, np.ndarray]:
     return flat
 
 
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
 def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
     flat = _flatten_paths(tree)
     bf16_paths = [p for p, a in flat.items() if a.dtype == _BF16]
@@ -42,6 +61,10 @@ def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
         flat[p] = flat[p].view(np.uint16)
     if bf16_paths:
         flat[_BF16_KEY] = np.asarray(bf16_paths)
+    crc_paths = sorted(flat)  # leaf paths only — meta keys join below
+    flat[_CRC_PATHS_KEY] = np.asarray(crc_paths)
+    flat[_CRC_VALS_KEY] = np.asarray([_crc(flat[p]) for p in crc_paths],
+                                     np.uint32)
     if step is not None:
         flat["__step__"] = np.asarray(step)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
@@ -52,13 +75,43 @@ def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
     os.replace(tmp, path)
 
 
+def _read_arrays(path: str) -> dict[str, np.ndarray]:
+    """Load every member of an npz, failing loudly on damage.
+
+    numpy reads members lazily through ``zipfile``, so truncation or bit
+    flips surface as a zoo of low-level errors mid-iteration; normalize all
+    of them (and a CRC-manifest mismatch) to :class:`CorruptCheckpointError`.
+    """
+    try:
+        with np.load(path) as data:
+            arrays = {k: data[k] for k in data.files}
+    except (zipfile.BadZipFile, zlib.error, ValueError, KeyError, EOFError,
+            OSError) as e:
+        raise CorruptCheckpointError(f"{path}: unreadable checkpoint "
+                                     f"({type(e).__name__}: {e})") from e
+    if _CRC_PATHS_KEY in arrays:  # legacy checkpoints carry no manifest
+        vals = arrays[_CRC_VALS_KEY]
+        for p, want in zip(arrays[_CRC_PATHS_KEY].tolist(), vals.tolist()):
+            if p not in arrays:
+                raise CorruptCheckpointError(
+                    f"{path}: leaf {p!r} in the CRC manifest is missing")
+            if _crc(arrays[p]) != int(want):
+                raise CorruptCheckpointError(
+                    f"{path}: leaf {p!r} fails its CRC32 — the file was "
+                    "truncated or bit-flipped since it was written")
+    return arrays
+
+
 def restore_checkpoint(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (dtypes preserved from disk)."""
-    with np.load(path) as data:
-        bf16 = (set(data[_BF16_KEY].tolist())
-                if _BF16_KEY in data.files else set())
-        arrays = {k: (data[k].view(_BF16) if k in bf16 else data[k])
-                  for k in data.files if k not in ("__step__", _BF16_KEY)}
+    """Restore into the structure of ``like`` (dtypes preserved from disk).
+
+    Raises :class:`CorruptCheckpointError` when the file is truncated,
+    bit-flipped, or otherwise fails its per-leaf CRC manifest."""
+    data = _read_arrays(path)
+    bf16 = (set(data[_BF16_KEY].tolist())
+            if _BF16_KEY in data else set())
+    arrays = {k: (v.view(_BF16) if k in bf16 else v)
+              for k, v in data.items() if k not in _META_KEYS}
 
     leaves_with_paths = []
 
@@ -85,7 +138,8 @@ def restore_ensemble(path: str, like: PyTree, *,
     :meth:`~repro.cluster.executor.ClusterEngine.save_ensemble` writes) —
     restores as-is; a single-model checkpoint is broadcast to
     ``num_chains`` identical chains (required then).  Mixed or mismatched
-    layouts fail loudly.
+    layouts fail loudly, as does a damaged file
+    (:class:`CorruptCheckpointError`).
     """
     from repro.utils import tree_broadcast_leading
 
@@ -111,7 +165,7 @@ def restore_ensemble(path: str, like: PyTree, *,
 
 
 def checkpoint_step(path: str) -> int | None:
-    with np.load(path) as data:
-        if "__step__" in data.files:
-            return int(data["__step__"])
+    data = _read_arrays(path)
+    if "__step__" in data:
+        return int(data["__step__"])
     return None

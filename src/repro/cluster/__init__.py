@@ -14,12 +14,18 @@ Serving has a request-level front door (:mod:`~repro.cluster.api`):
 every engine, and :class:`PagedDecodeEngine`
 (:mod:`~repro.cluster.paged`) — continuous batching over a paged KV bank
 with slot-level admission.
+
+Faults are part of the contract (see :mod:`repro.faults`): chaos schedules
+compile per-commit liveness masks, :class:`HealthState` carries the sticky
+per-chain quarantine mask, and deadline-aware shedding degrades serving
+instead of stalling it.
 """
 
 from repro.cluster.api import (  # noqa: F401
     BankEngine,
     Completion,
     Endpoint,
+    QueueFullError,
     Request,
 )
 from repro.cluster.ensemble import (  # noqa: F401
@@ -28,13 +34,18 @@ from repro.cluster.ensemble import (  # noqa: F401
     ensemble_step,
     ensemble_w2,
     ess,
+    healthy_chains,
     init_ensemble,
     split_rhat,
     w2_recorder,
     worker_keys,
 )
 from repro.cluster.decode import DecodeEngine, DecodeResult  # noqa: F401
-from repro.cluster.executor import BATCH_POLICIES, ClusterEngine  # noqa: F401
+from repro.cluster.executor import (  # noqa: F401
+    BATCH_POLICIES,
+    ClusterEngine,
+    HealthState,
+)
 from repro.cluster.paged import PagedDecodeEngine, PageAllocator  # noqa: F401
 from repro.cluster.serve import (  # noqa: F401
     HostScratch,
@@ -48,6 +59,7 @@ from repro.cluster.schedule import (  # noqa: F401
     WorkerSchedule,
     ensemble_async,
     stack_batch_info,
+    stack_liveness,
     stack_schedules,
     stack_worker_info,
 )

@@ -43,6 +43,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.analysis.instrument import Counters as _Counters, counters as _counters
 from repro.models.predictive import bma_logits
+from repro.obs.metrics import registry as _registry
 from repro.obs.trace import now as _now
 from repro.samplers.base import SamplerState
 from repro.utils import SHARD_MAP_CHECK_KW, shard_map
@@ -50,10 +51,21 @@ from repro.utils import SHARD_MAP_CHECK_KW, shard_map
 PyTree = Any
 
 #: finish reasons a :class:`Completion` can carry
-FINISH_LENGTH = "length"  # generated its full max_new_tokens budget
-FINISH_QUERY = "query"    # predictive query: answered in one shot
+FINISH_LENGTH = "length"      # generated its full max_new_tokens budget
+FINISH_QUERY = "query"        # predictive query: answered in one shot
+FINISH_DEADLINE = "deadline"  # deadline expired (shed or cut short)
+
+#: delivery status a :class:`Completion` can carry
+STATUS_OK = "ok"            # full result
+STATUS_TIMEOUT = "timeout"  # deadline hit mid-decode: partial tokens
+STATUS_SHED = "shed"        # deadline hit before admission: no tokens
 
 _REQUEST_IDS = itertools.count(1)
+
+
+class QueueFullError(RuntimeError):
+    """Backpressure: the engine's waiting queue is at ``max_waiting`` —
+    the caller must drain (or step) before submitting more work."""
 
 
 @dataclass
@@ -70,6 +82,12 @@ class Request:
     replayed request resamples identically).  Higher ``priority`` admits
     first and may preempt lower-priority running slots.  ``request_id`` is
     stamped by :meth:`Endpoint.submit`.
+
+    ``deadline_ms`` (optional) is a host-clock latency budget measured from
+    submission: the paged scheduler sheds the request
+    (:data:`STATUS_SHED`) if it expires while still waiting, and cuts it
+    short with partial tokens (:data:`STATUS_TIMEOUT`) if it expires while
+    decoding.  ``None`` — the default — never expires.
     """
 
     tokens: Any
@@ -78,6 +96,7 @@ class Request:
     priority: int = 0
     request_id: Optional[int] = None
     timing: dict = field(default_factory=dict)
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
@@ -95,7 +114,10 @@ class Completion:
     engines deliver at drain, so it equals ``finished`` there; the paged
     scheduler emits it at admission prefill).  ``stats`` carries the
     per-query :class:`~repro.cluster.serve.ServeResult` row on predictive
-    endpoints.
+    endpoints.  ``status`` is the delivery outcome: :data:`STATUS_OK`
+    (full result), :data:`STATUS_TIMEOUT` (deadline hit mid-decode —
+    ``tokens`` holds the partial prefix), or :data:`STATUS_SHED`
+    (deadline hit before admission — ``tokens`` is empty).
     """
 
     request_id: int
@@ -104,6 +126,7 @@ class Completion:
     finish_reason: str
     timing: dict
     stats: Optional[Any] = None
+    status: str = STATUS_OK
 
 
 class HostScratch:
@@ -166,7 +189,20 @@ class Endpoint:
     """
 
     def submit(self, request: Request) -> int:
-        """Enqueue one request; returns its stamped ``request_id``."""
+        """Enqueue one request; returns its stamped ``request_id``.
+
+        Engines with a ``max_waiting`` bound reject submissions once the
+        waiting queue is full — :class:`QueueFullError`, counted under
+        ``requests.rejected`` — instead of growing it without limit."""
+        limit = getattr(self, "max_waiting", None)
+        if limit is not None and self._queue_depth() >= limit:
+            _registry().counter(
+                "requests.rejected",
+                "submissions refused by max_waiting backpressure").inc()
+            raise QueueFullError(
+                f"waiting queue holds {self._queue_depth()} requests "
+                f"(max_waiting={limit}); drain() or step() before "
+                "submitting more")
         if request.request_id is None:
             request.request_id = next(_REQUEST_IDS)
         request.timing.setdefault("submitted", _now())
@@ -182,6 +218,11 @@ class Endpoint:
         in-flight work even when nothing new is pending."""
         reqs, self._pending = list(self._pending), []
         return self._drain(reqs)
+
+    def _queue_depth(self) -> int:
+        """Requests counted against ``max_waiting`` (engines with internal
+        waiting queues — the paged scheduler — add theirs)."""
+        return len(self._pending)
 
     def _validate_request(self, request: Request) -> None:
         del request  # engines override with their admission checks
@@ -313,8 +354,27 @@ class BankEngine(Endpoint):
         state — or any chain-stacked params pytree.  ``front`` is the
         engine's front argument (``model`` for decode engines,
         ``predict_fn`` for predictive ones); both may also be passed by
-        keyword."""
-        params = state.params if isinstance(state, SamplerState) else state
+        keyword.
+
+        A :class:`~repro.cluster.executor.HealthState` (or any state
+        carrying a ``health`` mask) serves **degraded**: quarantined chains
+        are dropped from the bank and the BMA averages the survivors, so a
+        partially-poisoned ensemble keeps answering instead of serving NaN
+        logits.  An all-quarantined bank raises."""
+        params = getattr(state, "params", state)
+        health = getattr(state, "health", None)
+        if health is not None:
+            h = np.asarray(health)
+            if not h.any():
+                raise ValueError(
+                    "every chain is quarantined — no healthy bank to serve")
+            if not h.all():
+                keep = np.flatnonzero(h)
+                params = jax.tree_util.tree_map(lambda x: x[keep], params)
+                _registry().gauge(
+                    "chains.unhealthy",
+                    "chains currently quarantined").set(float(
+                        h.size - keep.size))
         if front is not None:
             kw.setdefault(cls._FRONT_FIELD, front)
         return cls(params=params, **kw)

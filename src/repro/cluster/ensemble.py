@@ -206,6 +206,23 @@ def ess(draws: jnp.ndarray) -> jnp.ndarray:
     return jnp.minimum(C * N / jnp.maximum(tau, 1e-6), cap)
 
 
+def healthy_chains(cloud: np.ndarray, state=None) -> np.ndarray:
+    """``(C,)`` bool mask of chains fit for ensemble reductions.
+
+    A chain qualifies when its ``cloud`` row (from
+    :func:`chain_positions`) is all-finite *and* — when ``state`` carries
+    the executor's sticky ``health`` mask
+    (:class:`~repro.cluster.executor.HealthState`) — it is not
+    quarantined.  The W2/R-hat/ESS recorders drop the complement so one
+    diverged chain degrades the diagnostics instead of NaN-poisoning them.
+    """
+    ok = np.isfinite(np.asarray(cloud)).all(axis=1)
+    health = getattr(state, "health", None)
+    if health is not None:
+        ok &= np.asarray(health)
+    return ok
+
+
 def diagnostics_recorder(*, every: int = 1, window: int = 64) -> Callable:
     """An Engine-style hook recording split-R-hat and ESS of the chain cloud
     next to :func:`w2_recorder`.
@@ -222,11 +239,19 @@ def diagnostics_recorder(*, every: int = 1, window: int = 64) -> Callable:
     record: list[dict] = []
     history: list[np.ndarray] = []
     last = [-every]
+    latest_health = [None]  # newest sticky quarantine mask, if the engine has one
 
     def measure(step_end: int) -> None:
         if len(history) < 4:  # too few snapshots for a split estimate
             return
         draws = jnp.stack(history, axis=1)  # (C, n, d)
+        ok = np.isfinite(np.asarray(draws)).all(axis=(1, 2))
+        if latest_health[0] is not None:
+            ok &= latest_health[0]
+        if not ok.all():
+            if int(ok.sum()) < 2:  # cross-chain estimates need >= 2 chains
+                return
+            draws = draws[np.flatnonzero(ok)]
         row = {
             "step": step_end,
             "rhat_max": float(jnp.max(split_rhat(draws))),
@@ -243,6 +268,9 @@ def diagnostics_recorder(*, every: int = 1, window: int = 64) -> Callable:
                   ).set(row["ess_min"])
 
     def hook(step_end: int, state: SamplerState, _aux) -> None:
+        health = getattr(state, "health", None)
+        if health is not None:
+            latest_health[0] = np.asarray(health)
         if step_end - last[0] < every:
             return
         last[0] = step_end
@@ -258,6 +286,9 @@ def diagnostics_recorder(*, every: int = 1, window: int = 64) -> Callable:
             measure(step_end)
 
     def flush(step_end: int, state: SamplerState) -> None:
+        health = getattr(state, "health", None)
+        if health is not None:
+            latest_health[0] = np.asarray(health)
         if not record or record[-1]["step"] < step_end:
             if step_end > last[0]:
                 history.append(np.asarray(chain_positions(state.params)))
@@ -288,12 +319,24 @@ def w2_recorder(target_samples: jnp.ndarray, *, every: int = 1,
 
     def measure(step_end: int, state: SamplerState) -> None:
         last[0] = step_end
-        w2 = float(ensemble_w2(chain_positions(state.params), target_samples,
-                               **w2_kw))
+        cloud = chain_positions(state.params)
+        ok = healthy_chains(cloud, state)
+        dropped = int(cloud.shape[0] - ok.sum())
+        reg = _registry()
+        if dropped:
+            reg.gauge("chains.unhealthy",
+                      "chains currently quarantined or non-finite"
+                      ).set(float(dropped))
+        if dropped == cloud.shape[0]:  # nothing servable left to measure
+            w2 = float("nan")
+        else:
+            if dropped:
+                cloud = cloud[np.flatnonzero(ok)]
+            w2 = float(ensemble_w2(cloud, target_samples, **w2_kw))
         record.append({"step": step_end, "w2": w2,
                        "commit_time": seen_time[0],
                        "grad_evals": seen_evals[0]})
-        _registry().gauge(
+        reg.gauge(
             "cluster.w2", "newest empirical W2 of the chain cloud").set(w2)
 
     def hook(step_end: int, state: SamplerState, aux) -> None:

@@ -51,7 +51,11 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.cluster.api import (
+    FINISH_DEADLINE,
     FINISH_LENGTH,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
     BankEngine,
     Completion,
     Request,
@@ -127,6 +131,16 @@ class PagedDecodeEngine(BankEngine):
     the BMA law with position-folded subkeys (deterministic under replay).
     ``prompt_buckets`` is the prompt-length ladder: one prefill trace per
     rung, plus exactly one decode-step trace for the engine's lifetime.
+
+    Degradation is part of the schedule: a request carrying ``deadline_ms``
+    is **shed** (:data:`~repro.cluster.api.STATUS_SHED`, empty tokens) if
+    its budget expires while it still waits, and **cut short**
+    (:data:`~repro.cluster.api.STATUS_TIMEOUT`, the partial prefix) if it
+    expires mid-decode — an overloaded engine answers late requests cheaply
+    instead of convoying everything behind them.  ``max_waiting`` bounds the
+    waiting queue (pending + scheduler backlog): ``submit()`` past it raises
+    :class:`~repro.cluster.api.QueueFullError` instead of growing the queue
+    without limit.
     """
 
     model: Any
@@ -142,6 +156,7 @@ class PagedDecodeEngine(BankEngine):
     fused: bool = False
     fused_interpret: Optional[bool] = None  # default: compiled only on TPU
     return_logits: bool = False
+    max_waiting: Optional[int] = None  # submit() backpressure bound
 
     _FRONT_FIELD = "model"
 
@@ -194,6 +209,12 @@ class PagedDecodeEngine(BankEngine):
         self._m_ttft = reg.histogram(
             "paged.ttft_ms", LATENCY_MS_BUCKETS,
             "submit -> first token on host (emitted at admission prefill)")
+        self._m_shed = reg.counter(
+            "requests.shed", "requests dropped un-admitted: deadline expired "
+            "while waiting")
+        self._m_timeout = reg.counter(
+            "requests.timeout",
+            "requests cut short mid-decode: deadline expired in a slot")
         self._prefill_fn = jax.jit(self._prefill_core, donate_argnums=(1,))
         self._step_fn = jax.jit(self._step_core, donate_argnums=(1,))
 
@@ -289,6 +310,44 @@ class PagedDecodeEngine(BankEngine):
         self._waiting.extend(requests)
         self._waiting.sort(key=lambda r: (-r.priority, r._seq))
 
+    def _queue_depth(self) -> int:
+        # max_waiting counts the whole backlog: unpumped + scheduler queue
+        return len(self._pending) + len(self._waiting)
+
+    # -- deadlines: shed the waiting, cut short the decoding -------------------
+    @staticmethod
+    def _expired(req: Request, now: float) -> bool:
+        if req.deadline_ms is None:
+            return False
+        return now >= req.timing["submitted"] + req.deadline_ms * 1e-3
+
+    def _shed_one(self, req: Request) -> Completion:
+        req.timing["finished"] = _now()
+        _tracer().record("paged.shed", req.timing["submitted"],
+                         req.timing["finished"], request_id=req.request_id,
+                         deadline_ms=req.deadline_ms)
+        self._m_shed.inc()
+        return Completion(
+            request_id=req.request_id, tokens=np.zeros((0,), np.int32),
+            logits=None, finish_reason=FINISH_DEADLINE, timing=req.timing,
+            status=STATUS_SHED)
+
+    def _shed_waiting(self, finished: List[Completion]) -> None:
+        now = _now()
+        expired = [r for r in self._waiting if self._expired(r, now)]
+        if expired:
+            self._waiting = [r for r in self._waiting
+                             if not self._expired(r, now)]
+            finished.extend(self._shed_one(r) for r in expired)
+
+    def _expire_active(self, finished: List[Completion]) -> None:
+        now = _now()
+        for s, a in enumerate(self._slots):
+            if a is not None and self._expired(a.request, now):
+                self._m_timeout.inc()
+                finished.append(self._finish(s, status=STATUS_TIMEOUT,
+                                             reason=FINISH_DEADLINE))
+
     # -- scheduler: admission / eviction / completion --------------------------
     def _free_slot(self) -> Optional[int]:
         for s, a in enumerate(self._slots):
@@ -312,6 +371,10 @@ class PagedDecodeEngine(BankEngine):
     def _admit(self, finished: List[Completion]) -> None:
         while self._waiting:
             req = self._waiting[0]
+            if self._expired(req, _now()):  # never prefill a dead request
+                self._waiting.pop(0)
+                finished.append(self._shed_one(req))
+                continue
             s = self._free_slot()
             if s is None:
                 active = [i for i, a in enumerate(self._slots)
@@ -369,7 +432,8 @@ class PagedDecodeEngine(BankEngine):
         self._gauges()
         return None
 
-    def _finish(self, s: int) -> Completion:
+    def _finish(self, s: int, *, status: str = STATUS_OK,
+                reason: str = FINISH_LENGTH) -> Completion:
         a = self._slots[s]
         self._allocator.free(a.pages)
         self._tables[s] = 0
@@ -381,7 +445,8 @@ class PagedDecodeEngine(BankEngine):
                          r.timing["finished"], slot=s,
                          request_id=r.request_id,
                          new_tokens=len(a.tokens),
-                         evictions=r.timing.get("evictions", 0))
+                         evictions=r.timing.get("evictions", 0),
+                         status=status)
         self._m_requests.inc()
         self._m_tokens.inc(len(a.tokens))
         self._gauges()
@@ -389,7 +454,7 @@ class PagedDecodeEngine(BankEngine):
             request_id=r.request_id,
             tokens=np.asarray(a.tokens, np.int32),
             logits=(np.stack(a.logits) if self.return_logits else None),
-            finish_reason=FINISH_LENGTH, timing=r.timing)
+            finish_reason=reason, timing=r.timing, status=status)
 
     def _gauges(self) -> None:
         used = sum(a is not None for a in self._slots)
@@ -414,10 +479,14 @@ class PagedDecodeEngine(BankEngine):
         """One scheduler pump: admit waiting requests into free slots, run
         one ``decode_chunk``-token scanned micro-batch over every slot, and
         return whatever finished (freed slots are refilled immediately, so
-        the next chunk decodes the newly admitted prompts too)."""
+        the next chunk decodes the newly admitted prompts too).  Requests
+        past their ``deadline_ms`` are shed from the waiting queue (and cut
+        short in their slots) before any device work is spent on them."""
         self._enqueue(self._pending)
         self._pending = []
         finished: List[Completion] = []
+        self._shed_waiting(finished)
+        self._expire_active(finished)
         self._admit(finished)
         if self.num_active:
             with _span("paged.decode_chunk", active=self.num_active,
@@ -439,6 +508,7 @@ class PagedDecodeEngine(BankEngine):
                 self._last_tok[s] = toks[n - 1, s]
                 if self._remaining[s] == 0:
                     finished.append(self._finish(s))
+            self._expire_active(finished)  # partial prefix beats a dead slot
         self._admit(finished)  # admission the moment a sequence finishes
         return finished
 

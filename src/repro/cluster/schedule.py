@@ -44,6 +44,12 @@ class WorkerSchedule:
     consumes rows ``[offset_k, offset_k + batch_sizes[k])`` of the chain's
     data stream, so the executor's padded windowed gather needs no host
     bookkeeping.
+
+    ``alive`` (optional) is the per-commit liveness mask from a chaos
+    schedule (see :class:`~repro.core.delay_model.FaultPlan`): ``False``
+    commits are crashed workers' lost updates, which the executor executes
+    as masked no-ops.  ``None`` — the fault-free contract — keeps every
+    downstream code path bitwise identical to pre-fault behavior.
     """
 
     read_versions: np.ndarray  # (num_commits,) int32: server version each read saw
@@ -51,6 +57,7 @@ class WorkerSchedule:
     commit_times: np.ndarray   # (num_commits,) float64: simulated wall clock
     num_workers: int
     batch_sizes: np.ndarray | None = None  # (num_commits,) int32 per commit
+    alive: np.ndarray | None = None        # (num_commits,) bool, False = lost
 
     def __post_init__(self):
         k = np.arange(len(self.read_versions))
@@ -65,6 +72,13 @@ class WorkerSchedule:
             if np.any(sizes < 1):
                 raise ValueError("batch_sizes must be >= 1 per commit")
             object.__setattr__(self, "batch_sizes", sizes)
+        if self.alive is not None:
+            live = np.asarray(self.alive, bool)
+            if live.shape != self.read_versions.shape:
+                raise ValueError(
+                    f"alive shape {live.shape} must match read_versions "
+                    f"shape {self.read_versions.shape}")
+            object.__setattr__(self, "alive", live)
 
     def __len__(self) -> int:
         return int(self.read_versions.shape[0])
@@ -105,6 +119,11 @@ class WorkerSchedule:
         return slots
 
     @property
+    def num_lost(self) -> int:
+        """Commits lost to crashes (0 for a fault-free schedule)."""
+        return 0 if self.alive is None else int((~self.alive).sum())
+
+    @property
     def grad_evals(self) -> np.ndarray:
         """Cumulative gradient evaluations after each commit (inclusive) —
         the equal-compute axis for comparing batch policies."""
@@ -121,7 +140,8 @@ class WorkerSchedule:
                    worker_ids=np.asarray(trace.worker_ids, np.int32),
                    commit_times=np.asarray(trace.commit_times, np.float64),
                    num_workers=trace.num_workers,
-                   batch_sizes=trace.batch_sizes)
+                   batch_sizes=trace.batch_sizes,
+                   alive=trace.alive)
 
     @classmethod
     def from_delays(cls, delays: np.ndarray,
@@ -151,7 +171,8 @@ class WorkerSchedule:
         return DelayTrace(delays=self.delays, commit_times=self.commit_times,
                           worker_ids=self.worker_ids,
                           num_workers=self.num_workers,
-                          batch_sizes=self.batch_sizes)
+                          batch_sizes=self.batch_sizes,
+                          alive=self.alive)
 
     def with_batch_sizes(self, batch_sizes: np.ndarray,
                          buckets: Sequence[int] | None = None
@@ -167,7 +188,7 @@ class WorkerSchedule:
         return WorkerSchedule(
             read_versions=self.read_versions, worker_ids=self.worker_ids,
             commit_times=self.commit_times, num_workers=self.num_workers,
-            batch_sizes=snapped)
+            batch_sizes=snapped, alive=self.alive)
 
 
 def stack_schedules(schedules: Sequence[WorkerSchedule],
@@ -218,6 +239,24 @@ def stack_worker_info(schedules: Sequence[WorkerSchedule], steps: int):
     wid = np.stack([s.worker_ids[:steps] for s in schedules], axis=1)
     slot = np.stack([s.worker_slots[:steps] for s in schedules], axis=1)
     return wid.astype(np.int32), slot.astype(np.int32)
+
+
+def stack_liveness(schedules: Sequence[WorkerSchedule],
+                   steps: int) -> np.ndarray | None:
+    """Batch per-chain liveness into a ``(steps, C)`` bool mask.
+
+    Chains without an ``alive`` mask broadcast to all-True (their commits
+    all landed).  Returns ``None`` when no commit in the window was lost —
+    including the case where every schedule is fault-free — so the executor
+    only threads a liveness input (and only changes its compiled program)
+    when a fault actually realized.
+    """
+    if all(s.alive is None for s in schedules):
+        return None
+    live = np.stack(
+        [np.ones(steps, bool) if s.alive is None else s.alive[:steps]
+         for s in schedules], axis=1)
+    return None if live.all() else live
 
 
 def ensemble_async(model: WorkerModel, num_commits: int, num_chains: int,

@@ -15,6 +15,7 @@ from repro.core.delay import (  # noqa: F401
 from repro.core.delay_model import (  # noqa: F401
     BATCH_POLICIES,
     DelayTrace,
+    FaultPlan,
     WorkerModel,
     constant_delays,
     simulate_async,

@@ -27,6 +27,55 @@ from repro.utils import bucket_size
 #: the worker model and are passed straight to the executor.
 BATCH_POLICIES = ("fixed", "inverse-speed", "explicit")
 
+#: salt folded into the fault RNG seed so the chaos draws come from a stream
+#: *disjoint* from the step-time draws — a :class:`FaultPlan` with zero rates
+#: leaves the realized zero-fault trace bitwise identical.
+_FAULT_SEED_SALT = 0xFA17
+
+# event states on the simulator heap (4-tuple entries under a FaultPlan)
+_EV_RUN = 0      # worker computing normally
+_EV_STALLED = 1  # worker paused mid-step (stall already drawn; commits next)
+_EV_REJOIN = 2   # worker coming back from a crash; re-reads fresh params
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Per-commit fault process for :func:`simulate_async` chaos schedules.
+
+    All draws come from a dedicated RNG stream (seeded with
+    ``(seed, _FAULT_SEED_SALT)``), so attaching a plan with zero rates —
+    or no plan at all — reproduces today's traces bitwise.
+
+    - ``crash_rate``: probability a commit is lost mid-write.  The slot is
+      still burned (version counter advances, preserving the all-commit
+      numbering the executor's endogenous-staleness contract relies on) but
+      the update is marked dead in :attr:`DelayTrace.alive`; the worker goes
+      down for an exponential ``mean_downtime`` (in units of
+      ``mean_step_time``) and *re-reads fresh params* when it rejoins.
+    - ``pause_rate``: probability a worker is preempted just before its
+      commit, stalling an exponential ``mean_pause`` before the (now even
+      staler) gradient lands.  The commit itself survives.
+    """
+
+    crash_rate: float = 0.0
+    mean_downtime: float = 2.0
+    pause_rate: float = 0.0
+    mean_pause: float = 1.0
+
+    def __post_init__(self):
+        for name in ("crash_rate", "pause_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"FaultPlan.{name} must be in [0, 1), got {v}")
+        for name in ("mean_downtime", "mean_pause"):
+            if getattr(self, name) < 0.0:
+                raise ValueError(f"FaultPlan.{name} must be >= 0")
+
+    @property
+    def active(self) -> bool:
+        """Whether this plan can realize any fault at all."""
+        return self.crash_rate > 0.0 or self.pause_rate > 0.0
+
 
 @dataclass
 class DelayTrace:
@@ -35,6 +84,12 @@ class DelayTrace:
     ``batch_sizes`` (optional) is the per-commit minibatch size the committing
     worker averaged its gradient over — ``None`` means the legacy fixed-shape
     contract where every commit consumes one engine-defined minibatch.
+
+    ``alive`` (optional) marks commits that actually landed: ``False`` slots
+    are crashed workers' in-flight commits, which the executor turns into
+    masked no-ops.  ``None`` means every commit landed (the zero-fault
+    contract — note ``None``, not an all-True array, so fault-free plumbing
+    stays bitwise identical to a trace that never saw a :class:`FaultPlan`).
     """
 
     delays: np.ndarray        # (num_commits,) int32 staleness tau_k per commit
@@ -42,10 +97,16 @@ class DelayTrace:
     worker_ids: np.ndarray    # (num_commits,) which worker committed
     num_workers: int
     batch_sizes: np.ndarray | None = None  # (num_commits,) int32 per commit
+    alive: np.ndarray | None = None        # (num_commits,) bool, False = lost
 
     @property
     def max_delay(self) -> int:
         return int(self.delays.max(initial=0))
+
+    @property
+    def num_lost(self) -> int:
+        """Commits lost to crashes (0 for a fault-free trace)."""
+        return 0 if self.alive is None else int((~self.alive).sum())
 
     @property
     def mean_delay(self) -> float:
@@ -75,6 +136,7 @@ class WorkerModel:
     heterogeneity: float = 0.2
     update_cost: float = 0.05  # serialized commit (lock / memory write) time
     seed: int = 0
+    faults: FaultPlan | None = None  # chaos process; None = fault-free
     _speeds: np.ndarray = field(init=False, repr=False)
 
     def __post_init__(self):
@@ -129,6 +191,8 @@ def simulate_async(model: WorkerModel, num_commits: int, seed: int = 0, *,
                               buckets=buckets)
     scale = sizes.astype(np.float64) / float(base_batch)
     rng = np.random.default_rng(seed)
+    if model.faults is not None and model.faults.active:
+        return _simulate_chaos(model, num_commits, seed, rng, sizes, scale)
     heap: list[tuple[float, int, int]] = []  # (finish_time, worker, read_version)
     for w in range(model.num_workers):
         heapq.heappush(heap, (model.sample_step_time(rng, w) * scale[w], w, 0))
@@ -150,6 +214,66 @@ def simulate_async(model: WorkerModel, num_commits: int, seed: int = 0, *,
     return DelayTrace(delays=delays, commit_times=times, worker_ids=workers,
                       num_workers=model.num_workers,
                       batch_sizes=sizes[workers])
+
+
+def _simulate_chaos(model: WorkerModel, num_commits: int, seed: int,
+                    rng: np.random.Generator, sizes: np.ndarray,
+                    scale: np.ndarray) -> DelayTrace:
+    """The fault-injected event loop behind :func:`simulate_async`.
+
+    Same event-driven core, plus crash/pause/rejoin events drawn from a
+    *separate* RNG stream.  A crashed commit still burns a version slot (so
+    ``read_versions`` keep the all-commit numbering the executor derives
+    staleness against) but is marked dead in ``alive``; the crashed worker
+    rejoins after an exponential downtime and re-reads the then-current
+    version — exactly the elastic join/leave semantics the ROADMAP asks for.
+    """
+    plan = model.faults
+    rng_f = np.random.default_rng((seed, _FAULT_SEED_SALT))
+    # (finish_time, worker, read_version, event_state)
+    heap: list[tuple[float, int, int, int]] = []
+    for w in range(model.num_workers):
+        heapq.heappush(heap,
+                       (model.sample_step_time(rng, w) * scale[w], w, 0,
+                        _EV_RUN))
+
+    delays = np.empty(num_commits, dtype=np.int32)
+    times = np.empty(num_commits, dtype=np.float64)
+    workers = np.empty(num_commits, dtype=np.int32)
+    alive = np.ones(num_commits, dtype=bool)
+    version = 0
+    k = 0
+    while k < num_commits:
+        t, w, v_read, ev = heapq.heappop(heap)
+        if ev == _EV_REJOIN:
+            # back from the dead: fresh read of the current version
+            heapq.heappush(heap,
+                           (t + model.sample_step_time(rng, w) * scale[w], w,
+                            version, _EV_RUN))
+            continue
+        if ev == _EV_RUN and rng_f.random() < plan.pause_rate:
+            # preempted just before the commit; the gradient only gets staler
+            stall = rng_f.exponential(plan.mean_pause * model.mean_step_time)
+            heapq.heappush(heap, (t + stall, w, v_read, _EV_STALLED))
+            continue
+        crashed = rng_f.random() < plan.crash_rate
+        t += model.update_cost  # serialized write (attempted either way)
+        delays[k] = version - v_read
+        times[k] = t
+        workers[k] = w
+        alive[k] = not crashed
+        version += 1
+        k += 1
+        if crashed:
+            down = rng_f.exponential(plan.mean_downtime * model.mean_step_time)
+            heapq.heappush(heap, (t + down, w, -1, _EV_REJOIN))
+        else:
+            heapq.heappush(heap,
+                           (t + model.sample_step_time(rng, w) * scale[w], w,
+                            version, _EV_RUN))
+    return DelayTrace(delays=delays, commit_times=times, worker_ids=workers,
+                      num_workers=model.num_workers,
+                      batch_sizes=sizes[workers], alive=alive)
 
 
 def simulate_sync(model: WorkerModel, num_rounds: int, seed: int = 0) -> DelayTrace:
@@ -202,7 +326,8 @@ def truncate_to_evals(trace: DelayTrace, evals: int) -> DelayTrace:
         delays=trace.delays[:k], commit_times=trace.commit_times[:k],
         worker_ids=trace.worker_ids[:k], num_workers=trace.num_workers,
         batch_sizes=None if trace.batch_sizes is None
-        else trace.batch_sizes[:k])
+        else trace.batch_sizes[:k],
+        alive=None if trace.alive is None else trace.alive[:k])
 
 
 def speedup_vs_sync(async_trace: DelayTrace, sync_trace: DelayTrace) -> float:

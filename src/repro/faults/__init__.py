@@ -1,0 +1,86 @@
+"""repro.faults — deterministic fault injection and the self-healing story.
+
+The async-SGLD convergence theory survives staleness; production clusters
+add a second adversary the paper never models: machines die.  This package
+is the one-stop facade over the repo's fault surface — every primitive
+lives next to the subsystem it stresses, and is re-exported here so chaos
+experiments read as one vocabulary:
+
+- :class:`FaultPlan` (:mod:`repro.core.delay_model`) — worker chaos
+  schedules: Poisson crash/pause events compiled into the same
+  :class:`~repro.cluster.schedule.WorkerSchedule` the healthy cluster
+  replays, with a per-commit liveness mask.  Dead commits execute as
+  masked no-ops on device (:func:`~repro.cluster.schedule.stack_liveness`)
+  — same single scan trace, and a zero-rate plan is **bitwise-identical**
+  to no plan at all.
+- :class:`HealthState` (:mod:`repro.cluster.executor`) — the sticky
+  per-chain quarantine mask: a chain whose iterate goes non-finite stops
+  committing (on-device ``where`` masking, no retrace), drops out of every
+  ensemble reduction (:func:`~repro.cluster.ensemble.healthy_chains`), and
+  is respawned at the next chunk boundary from a healthy donor with a
+  ``fold_in``-freshened key.  :func:`nan_storm` below builds the poison
+  masks that drive it in tests and benches.
+- :class:`CorruptCheckpointError` (:mod:`repro.checkpoint.io`) — per-leaf
+  CRC32 manifests make a truncated or bit-flipped checkpoint fail loudly,
+  naming the damaged leaf; :meth:`ClusterEngine.resume` stitches a
+  SIGKILL'd run back together **bitwise** from the last good one.
+- :class:`QueueFullError` + deadline shedding
+  (:mod:`repro.cluster.api` / :mod:`repro.cluster.paged`) — the serving
+  degradation path: bounded queues reject instead of bloating, expired
+  requests are shed (:data:`~repro.cluster.api.STATUS_SHED`) or cut short
+  (:data:`~repro.cluster.api.STATUS_TIMEOUT`) instead of convoying the
+  live ones, and a partially-quarantined bank serves a degraded BMA from
+  the surviving chains (:meth:`BankEngine.from_cluster`).
+
+Everything is observable: ``faults.injected`` / ``chains.quarantined`` /
+``chains.respawned`` / ``chains.unhealthy`` / ``requests.shed`` /
+``requests.timeout`` / ``requests.rejected`` in the metrics registry and
+``faults.respawn`` / ``paged.shed`` spans on the tracer.  The operational
+walkthrough lives in ``docs/ROBUSTNESS.md``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.checkpoint.io import CorruptCheckpointError  # noqa: F401
+from repro.cluster.api import (  # noqa: F401
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+    QueueFullError,
+)
+from repro.cluster.executor import HealthState  # noqa: F401
+from repro.cluster.schedule import stack_liveness  # noqa: F401
+from repro.core.delay_model import FaultPlan  # noqa: F401
+
+__all__ = [
+    "CorruptCheckpointError",
+    "FaultPlan",
+    "HealthState",
+    "QueueFullError",
+    "STATUS_OK",
+    "STATUS_SHED",
+    "STATUS_TIMEOUT",
+    "nan_storm",
+    "stack_liveness",
+]
+
+
+def nan_storm(steps: int, num_chains: int, *, rate: float = 0.01,
+              seed: int = 0) -> np.ndarray:
+    """A ``(steps, num_chains)`` bool poison mask: True cells NaN the
+    chain's iterate *after* that commit's sampler step.
+
+    Feed it to :meth:`ClusterEngine.run(..., poison=...)
+    <repro.cluster.executor.ClusterEngine.run>` (with
+    ``health_check=True``) to drive quarantine/respawn deterministically —
+    the mask is host-side data, so the same seed reproduces the same storm
+    on any backend.  ``rate`` is the per-commit-per-chain poison
+    probability; the RNG is dedicated (salted stream), so adding a storm
+    never perturbs schedule or sampler randomness.
+    """
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"rate must be in [0, 1], got {rate}")
+    rng = np.random.default_rng((seed, 0x5A17))
+    return rng.random((steps, num_chains)) < rate

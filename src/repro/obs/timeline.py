@@ -119,8 +119,12 @@ def cluster_timeline(schedules, *, max_chains: Optional[int] = 8,
                     "read_version": int(sched.read_versions[k])}
             if sizes is not None:
                 args["batch_size"] = int(sizes[k])
-            events.append(_event("commit", t0, t1, c, w, args,
-                                 cat="cluster"))
+            alive = getattr(sched, "alive", None)
+            lost = alive is not None and not bool(alive[k])
+            if lost:
+                args["lost"] = True  # crashed mid-commit: masked no-op
+            events.append(_event("commit (lost)" if lost else "commit",
+                                 t0, t1, c, w, args, cat="cluster"))
         for w in sorted(last_by_worker):
             events.append(_meta(c, f"worker {w}", w))
     return {"traceEvents": events, "displayTimeUnit": "ms"}

@@ -125,7 +125,8 @@ def drive_chunks(run_chunk, state: SamplerState, *, steps: int,
                  extra, batches: Optional[PyTree] = None,
                  gen_batches=None, key: Optional[jax.Array] = None,
                  commit_times=None, host_aux: Optional[dict] = None,
-                 slice_batches: bool = True, chunk_info=None):
+                 slice_batches: bool = True, chunk_info=None,
+                 chunk_post=None):
     """The host chunk loop shared by :class:`Engine` and
     :class:`~repro.cluster.executor.ClusterEngine`.
 
@@ -140,7 +141,11 @@ def drive_chunks(run_chunk, state: SamplerState, *, steps: int,
     axis ``steps``) and any ``host_aux`` arrays are sliced per chunk and
     merged into its aux; ``chunk_info(done, n)`` may return extra *static*
     args for ``run_chunk`` (e.g. the chunk's padded bucket width).  Hooks
-    run between chunks and are flushed at the end.
+    run between chunks and are flushed at the end.  ``chunk_post(done,
+    state) -> state`` (optional) runs *after* the chunk's hooks and may
+    replace the carry — the seam the cluster executor uses for chain
+    respawn and periodic fault-tolerant checkpoints; hooks therefore see
+    each chunk's raw outcome (quarantines included) before it heals.
     """
     if batches is None and gen_batches is None:
         batches = jnp.zeros((steps, 1))  # batchless oracles (potentials)
@@ -182,6 +187,8 @@ def drive_chunks(run_chunk, state: SamplerState, *, steps: int,
                 aux_chunks.append(aux)
             for hook in hooks:
                 hook(done, state, aux)
+            if chunk_post is not None:
+                state = chunk_post(done, state)
     flush_hooks(hooks, done, state)
 
     if not aux_chunks:

@@ -2,10 +2,7 @@
 masked executor path (one trace per ladder rung), fixed-policy bitwise
 parity, staleness/variance trade-off, and per-worker RNG attribution."""
 
-import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -450,11 +447,8 @@ print(json.dumps({
 
 @pytest.mark.slow
 def test_sharded_masked_matches_unsharded_on_debug_mesh():
-    out = subprocess.run(
-        [sys.executable, "-c", SCRIPT_SHARDED_MASKED],
-        capture_output=True, text=True, timeout=600,
-        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"})
-    assert out.returncode == 0, out.stderr[-3000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    from subproc import run_json
+
+    res = run_json(SCRIPT_SHARDED_MASKED, timeout=600)
     assert res["bitwise_equal"], res
     assert res["traces_match"], res

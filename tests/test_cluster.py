@@ -2,10 +2,7 @@
 schedule semantics, retrace flatness, staleness validation, sharded
 equivalence, and convergence-in-measure via empirical W2."""
 
-import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -250,12 +247,9 @@ print(json.dumps({
 
 @pytest.mark.slow
 def test_sharded_matches_unsharded_on_debug_mesh():
-    out = subprocess.run(
-        [sys.executable, "-c", SCRIPT_SHARDED],
-        capture_output=True, text=True, timeout=600,
-        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"})
-    assert out.returncode == 0, out.stderr[-3000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    from subproc import run_json
+
+    res = run_json(SCRIPT_SHARDED, timeout=600)
     assert res["bitwise_equal"], res
     assert res["chain_axis_sharded"], res
     assert res["traces"] == 1, res

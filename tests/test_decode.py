@@ -7,10 +7,7 @@ stream compiles one trace per (bucket, max_new) pair, the fused Pallas
 decode step is bitwise-equal to its oracle, and sharded decode is
 bitwise-equal to unsharded (slow subprocess test)."""
 
-import json
 import os
-import subprocess
-import sys
 from dataclasses import replace
 
 import jax
@@ -331,12 +328,9 @@ def test_sharded_decode_bitwise_equal_single_device():
     all-gather of the logit block, replicated BMA) is bitwise-equal to the
     single-device engine, and the 2-D (chains x tensor-parallel) bank
     streams the same tokens."""
-    out = subprocess.run(
-        [sys.executable, "-c", SCRIPT_SHARDED],
-        capture_output=True, text=True, timeout=900,
-        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"})
-    assert out.returncode == 0, out.stderr[-3000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    from subproc import run_json
+
+    res = run_json(SCRIPT_SHARDED, timeout=900)
     assert res["tokens_bitwise"], res
     assert res["logits_bitwise"], res
     assert res["chain_axis_sharded"], res

@@ -1,0 +1,479 @@
+"""repro.faults: deterministic fault injection and the self-healing story.
+
+The robustness contract, pinned:
+
+- chaos schedules are *structurally* gated: a zero-rate :class:`FaultPlan`
+  realizes the bitwise-identical trace to no plan at all, and a fault-free
+  engine run compiles the exact pre-fault program (``health_check`` off,
+  no ``alive``/``poison`` operands threaded);
+- dead commits are masked no-ops on device: the chain's iterate freezes,
+  its commit counter still ticks (the version slot burns), and the whole
+  chaos run stays one scan trace;
+- a NaN'd chain is quarantined sticky on device, excluded from W2 /
+  R-hat / ESS, respawned from a healthy donor at a chunk boundary, and a
+  partially-quarantined bank serves a degraded BMA (all-quarantined
+  raises);
+- checkpoint/resume stitches bitwise — including across a SIGKILL — and a
+  truncated or bit-flipped checkpoint raises
+  :class:`CorruptCheckpointError` naming the damage;
+- serving degrades instead of stalling: ``max_waiting`` backpressure
+  rejects, expired waiting requests are shed, expired active slots are
+  cut short with the partial prefix.
+"""
+
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import samplers
+from repro.cluster import (
+    ClusterEngine,
+    HealthState,
+    PagedDecodeEngine,
+    ServeEngine,
+    WorkerSchedule,
+    diagnostics_recorder,
+    ensemble_async,
+    healthy_chains,
+    w2_recorder,
+)
+from repro.cluster.api import (
+    FINISH_DEADLINE,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+    QueueFullError,
+    Request,
+)
+from repro.core import Quadratic, WorkerModel, simulate_async
+from repro.faults import FaultPlan, nan_storm
+from repro.obs.timeline import cluster_timeline
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+C, STEPS, TAU = 8, 37, 8
+CHAOS = FaultPlan(crash_rate=0.15, mean_downtime=2.0,
+                  pause_rate=0.1, mean_pause=1.0)
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return Quadratic.make(jax.random.PRNGKey(0), d=4, m=1.0, L=3.0)
+
+
+@pytest.fixture(scope="module")
+def quad_sampler(quad):
+    return samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
+                         gamma=0.01, sigma=0.5, tau=TAU)
+
+
+@pytest.fixture(scope="module")
+def deep_sampler(quad):
+    # crashed workers rejoin with much staler reads than a healthy pool
+    # ever produces; chaos runs need a deeper iterate ring
+    return samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
+                         gamma=0.01, sigma=0.5, tau=32)
+
+
+def chaos_schedules(steps=STEPS, chains=C, seed=0):
+    wm = WorkerModel(num_workers=4, seed=1, faults=CHAOS)
+    return ensemble_async(wm, steps, chains, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# chaos schedules: simulation + structural gating
+# ---------------------------------------------------------------------------
+def test_zero_rate_fault_plan_is_bitwise_noop():
+    """The fault RNG is a dedicated salted stream, so merely *attaching* an
+    inert plan must not perturb a single drawn time or delay."""
+    wm0 = WorkerModel(num_workers=4, seed=2)
+    wm1 = WorkerModel(num_workers=4, seed=2, faults=FaultPlan())
+    a = simulate_async(wm0, 200, seed=5)
+    b = simulate_async(wm1, 200, seed=5)
+    np.testing.assert_array_equal(a.delays, b.delays)
+    np.testing.assert_array_equal(a.commit_times, b.commit_times)
+    np.testing.assert_array_equal(a.worker_ids, b.worker_ids)
+    assert b.alive is None and b.num_lost == 0
+    assert not FaultPlan().active and CHAOS.active
+
+
+def test_chaos_trace_loses_commits_and_roundtrips():
+    wm = WorkerModel(num_workers=4, seed=2, faults=CHAOS)
+    tr = simulate_async(wm, 200, seed=5)
+    assert tr.alive is not None and 0 < tr.num_lost < 200
+    # crashes burn version slots: delays stay the arange-minus-read identity
+    sched = WorkerSchedule.from_trace(tr)
+    np.testing.assert_array_equal(sched.alive, tr.alive)
+    np.testing.assert_array_equal(sched.to_trace().alive, tr.alive)
+    np.testing.assert_array_equal(
+        sched.delays, np.arange(200) - sched.read_versions)
+    # commit times stay sorted even across downtime/rejoin events
+    assert np.all(np.diff(tr.commit_times) >= 0)
+
+
+def test_fault_plan_validates():
+    with pytest.raises(ValueError):
+        FaultPlan(crash_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(pause_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(crash_rate=0.1, mean_downtime=-1.0)
+
+
+def test_nan_storm_deterministic_and_validated():
+    a = nan_storm(40, 8, rate=0.1, seed=3)
+    b = nan_storm(40, 8, rate=0.1, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (40, 8) and a.dtype == bool and a.any()
+    assert not nan_storm(40, 8, rate=0.0).any()
+    with pytest.raises(ValueError):
+        nan_storm(10, 2, rate=1.5)
+
+
+def test_timeline_annotates_lost_commits():
+    tr = simulate_async(WorkerModel(num_workers=4, seed=2, faults=CHAOS),
+                        120, seed=5)
+    sched = WorkerSchedule.from_trace(tr)
+    events = cluster_timeline(sched)["traceEvents"]
+    lost = [e for e in events if e.get("name") == "commit (lost)"]
+    live = [e for e in events if e.get("name") == "commit"]
+    assert len(lost) == tr.num_lost
+    assert len(live) == 120 - tr.num_lost
+    assert all(e["args"]["lost"] for e in lost)
+
+
+# ---------------------------------------------------------------------------
+# executor: dead commits as masked no-ops, zero-fault bitwise pinning
+# ---------------------------------------------------------------------------
+def test_dead_commits_freeze_iterate_but_burn_version_slots(quad_sampler):
+    """A chain whose every commit is lost keeps its init params bit-for-bit
+    while its commit counter ticks to STEPS — and the masked program is
+    still one trace."""
+    fresh_reads = np.arange(STEPS)
+    dead = WorkerSchedule(read_versions=fresh_reads,
+                          worker_ids=np.zeros(STEPS, np.int64),
+                          commit_times=np.arange(STEPS, dtype=np.float64),
+                          num_workers=1, alive=np.zeros(STEPS, bool))
+    live = WorkerSchedule(read_versions=fresh_reads,
+                          worker_ids=np.zeros(STEPS, np.int64),
+                          commit_times=np.arange(STEPS, dtype=np.float64),
+                          num_workers=1)
+    engine = ClusterEngine(quad_sampler, num_chains=2, chunk_size=10)
+    state = engine.init(jnp.ones(4), jax.random.PRNGKey(0))
+    p0 = np.asarray(state.params)
+    out, _ = engine.run(state, steps=30, schedule=[dead, live])
+    assert np.array_equal(np.asarray(out.params[0]), p0[0])  # frozen
+    assert not np.array_equal(np.asarray(out.params[1]), p0[1])  # moved
+    assert np.all(np.asarray(out.step) == 30)  # slots burn regardless
+    assert engine.num_traces == 1
+
+
+def test_health_check_without_faults_is_bitwise_identical(quad_sampler):
+    """The acceptance pin: a zero-fault configuration must produce the
+    exact trajectory of the pre-fault engine — health masking composes via
+    ``where(keep, new, old)`` with keep always True, and quarantine never
+    triggers."""
+    sched = ensemble_async(WorkerModel(num_workers=4, seed=1), 30, C,
+                           seed=0)
+    plain = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10)
+    state = plain.init(jnp.zeros(4), jax.random.PRNGKey(42))
+    ref, _ = plain.run(state, steps=30, schedule=sched)
+
+    guarded = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10,
+                            health_check=True)
+    state = guarded.init(jnp.zeros(4), jax.random.PRNGKey(42))
+    out, _ = guarded.run(state, steps=30, schedule=sched)
+    assert isinstance(out, HealthState)
+    assert np.asarray(out.health).all()
+    assert np.array_equal(np.asarray(out.params), np.asarray(ref.params))
+    assert np.array_equal(np.asarray(out.key), np.asarray(ref.key))
+    assert guarded.num_traces == 1
+
+
+def test_chaos_run_stays_single_trace_and_finite(deep_sampler):
+    engine = ClusterEngine(deep_sampler, num_chains=C, chunk_size=10,
+                           health_check=True)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(3))
+    out, _ = engine.run(state, steps=60, schedule=chaos_schedules(60))
+    assert np.isfinite(np.asarray(out.params)).all()
+    assert np.all(np.asarray(out.step) == 60)
+    assert engine.num_traces == 1
+
+
+# ---------------------------------------------------------------------------
+# quarantine + respawn
+# ---------------------------------------------------------------------------
+def test_poison_quarantines_then_respawns(quad_sampler):
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10,
+                           health_check=True)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(1))
+    poison = np.zeros((30, C), bool)
+    poison[5, 2] = poison[5, 5] = True
+    out, _ = engine.run(state, steps=30, poison=poison)
+    assert isinstance(out, HealthState)
+    assert np.asarray(out.health).all()  # respawned at a chunk boundary
+    assert np.isfinite(np.asarray(out.params)).all()
+    # respawned chains got fresh fold_in keys: they decorrelate from donors
+    p = np.asarray(out.params)
+    assert not np.array_equal(p[2], p[0]) and not np.array_equal(p[5], p[1])
+    assert engine.num_traces == 1
+
+
+def test_quarantine_without_respawn_is_sticky(quad_sampler):
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10,
+                           health_check=True, respawn=False)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(1))
+    poison = np.zeros((30, C), bool)
+    poison[5, 2] = poison[5, 5] = True
+    out, _ = engine.run(state, steps=30, poison=poison)
+    health = np.asarray(out.health)
+    assert not health[2] and not health[5] and health.sum() == C - 2
+    # the quarantined chains froze at their last healthy iterate: finite
+    assert np.isfinite(np.asarray(out.params)).all()
+
+
+def test_recorders_mask_unhealthy_chains(quad_sampler):
+    """W2 / R-hat / ESS stay finite while a quarantined chain rides along
+    in the carry — the reductions drop it instead of going NaN."""
+    target = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (256, 4)))
+    w2 = w2_recorder(jnp.asarray(target), every=5)
+    diag = diagnostics_recorder(every=1, window=8)
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=5,
+                           health_check=True, respawn=False,
+                           hooks=[w2, diag])
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(1))
+    poison = np.zeros((40, C), bool)
+    poison[3, 1] = True
+    out, _ = engine.run(state, steps=40, poison=poison)
+    assert not np.asarray(out.health)[1]
+    assert len(w2.record) > 0 and len(diag.record) > 0
+    assert all(np.isfinite(r["w2"]) for r in w2.record)
+    assert all(np.isfinite(r["rhat_max"]) and np.isfinite(r["ess_min"])
+               for r in diag.record)
+    mask = healthy_chains(np.asarray(out.params), out)
+    assert not mask[1] and mask.sum() == C - 1
+
+
+def test_degraded_serving_drops_quarantined_chains(quad_sampler):
+    state = ClusterEngine(quad_sampler, num_chains=4,
+                          chunk_size=5).init(jnp.zeros(4),
+                                             jax.random.PRNGKey(0))
+    bad = state.params.at[1].set(jnp.nan)
+    hs = HealthState(state._replace(params=bad),
+                     jnp.array([True, False, True, True]))
+    eng = ServeEngine.from_cluster(hs, lambda p, x: x @ p)
+    assert eng.num_chains == 3  # chain 1 dropped from the bank
+    assert np.isfinite(np.asarray(eng.params)).all()
+    with pytest.raises(ValueError, match="every chain is quarantined"):
+        ServeEngine.from_cluster(
+            HealthState(state, jnp.zeros(4, bool)), lambda p, x: x @ p)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+def test_resume_stitches_bitwise(deep_sampler, tmp_path):
+    sched = chaos_schedules(40)
+    poison = nan_storm(40, C, rate=0.01, seed=7)
+
+    def engine():
+        return ClusterEngine(deep_sampler, num_chains=C, chunk_size=10,
+                             health_check=True)
+
+    full_eng = engine()
+    state = full_eng.init(jnp.zeros(4), jax.random.PRNGKey(6))
+    full, _ = full_eng.run(state, steps=40, schedule=sched, poison=poison)
+
+    ck = str(tmp_path / "run.npz")
+    part_eng = engine()
+    state = part_eng.init(jnp.zeros(4), jax.random.PRNGKey(6))
+    part_eng.run(state, steps=20, schedule=sched, poison=poison[:20],
+                 checkpoint_path=ck)
+    # the interrupted run above only knew the first 20 commits; resume
+    # replays the *full* call and stitches from the newest checkpoint
+    res_eng = engine()
+    state = res_eng.init(jnp.zeros(4), jax.random.PRNGKey(6))
+    out, _ = res_eng.resume(ck, state, steps=40, schedule=sched,
+                            poison=poison)
+    for a, b in zip(jax.tree_util.tree_leaves(full),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_with_missing_file_starts_fresh(quad_sampler, tmp_path):
+    ck = str(tmp_path / "never_written.npz")
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(0))
+    out, _ = engine.resume(ck, state, steps=20)
+    assert np.all(np.asarray(out.step) == 20)
+    assert os.path.exists(ck)  # the fresh run checkpointed to the same path
+
+
+def test_corrupt_checkpoint_raises_loudly(quad_sampler, tmp_path):
+    from repro.checkpoint import CorruptCheckpointError, save_checkpoint
+
+    ck = str(tmp_path / "ck.npz")
+    engine = ClusterEngine(quad_sampler, num_chains=C, chunk_size=10)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(0))
+    engine.run(state, steps=20, checkpoint_path=ck)
+
+    truncated = str(tmp_path / "trunc.npz")
+    blob = open(ck, "rb").read()
+    open(truncated, "wb").write(blob[:len(blob) // 2])
+    with pytest.raises(CorruptCheckpointError):
+        engine.resume(truncated, state, steps=40)
+
+    flipped = str(tmp_path / "flip.npz")
+    corrupt = bytearray(blob)
+    corrupt[len(corrupt) // 2] ^= 0xFF  # bit-flip mid-archive
+    open(flipped, "wb").write(bytes(corrupt))
+    with pytest.raises(CorruptCheckpointError):
+        engine.resume(flipped, state, steps=40)
+
+    # legacy checkpoints (no CRC manifest) still load
+    legacy = str(tmp_path / "legacy.npz")
+    save_checkpoint(legacy, {"x": np.arange(4.0)})
+    from repro.checkpoint import restore_checkpoint
+
+    got = restore_checkpoint(legacy, {"x": np.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.arange(4.0))
+
+
+_KILL_SCRIPT = r"""
+import os, signal
+import jax, jax.numpy as jnp, numpy as np
+from repro import samplers
+from repro.cluster import ClusterEngine
+from repro.core import Quadratic
+
+quad = Quadratic.make(jax.random.PRNGKey(0), d=4, m=1.0, L=3.0)
+sampler = samplers.sgld("consistent", lambda p, b: quad.grad(p, b),
+                        gamma=0.01, sigma=0.5, tau=8)
+kills = [3]
+def killer(done, state, aux):
+    kills[0] -= 1
+    if kills[0] == 0:
+        os.kill(os.getpid(), signal.SIGKILL)  # no atexit, no cleanup
+engine = ClusterEngine(sampler, num_chains=8, chunk_size=10,
+                       health_check=True, hooks=[killer])
+state = engine.init(jnp.zeros(4), jax.random.PRNGKey(6))
+engine.run(state, steps=60, checkpoint_path=CKPT)
+"""
+
+
+@pytest.mark.slow
+def test_resume_after_sigkill_is_bitwise(quad_sampler, tmp_path):
+    """Kill -9 mid-run (after the third chunk's checkpoint), then resume:
+    the stitched trajectory equals the uninterrupted one leaf-exact."""
+    ck = str(tmp_path / "killed.npz")
+    script = f"CKPT = {ck!r}\n" + _KILL_SCRIPT
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == -signal.SIGKILL, proc.stderr[-2000:]
+    assert os.path.exists(ck)  # at least one atomic checkpoint landed
+
+    engine = ClusterEngine(quad_sampler, num_chains=8, chunk_size=10,
+                           health_check=True)
+    state = engine.init(jnp.zeros(4), jax.random.PRNGKey(6))
+    out, _ = engine.resume(ck, state, steps=60)
+
+    ref_eng = ClusterEngine(quad_sampler, num_chains=8, chunk_size=10,
+                            health_check=True)
+    state = ref_eng.init(jnp.zeros(4), jax.random.PRNGKey(6))
+    ref, _ = ref_eng.run(state, steps=60)
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# serving degradation: backpressure + deadlines
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def paged():
+    from repro.configs import get_reduced
+    from repro.models.transformer import Model, init_params
+
+    cfg = get_reduced("qwen3-4b")
+    model = Model(cfg, remat=False)
+    bank = jax.vmap(lambda k: init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), 2))
+    return cfg, model, bank
+
+
+def _mk(cfg, t=4, n=5, **kw):
+    rng = np.random.default_rng(t * 31 + n)
+    return Request(tokens=rng.integers(0, cfg.vocab_size, (t,),
+                                       dtype=np.int32),
+                   max_new_tokens=n, **kw)
+
+
+def test_max_waiting_backpressure(paged):
+    cfg, model, bank = paged
+    eng = PagedDecodeEngine(model=model, params=bank, num_slots=2,
+                            page_size=8, max_seq=32, decode_chunk=4,
+                            max_waiting=3)
+    for _ in range(3):
+        eng.submit(_mk(cfg))
+    with pytest.raises(QueueFullError, match="max_waiting"):
+        eng.submit(_mk(cfg))
+    out = eng.drain()  # draining frees the queue again
+    assert len(out) == 3 and all(c.status == STATUS_OK for c in out)
+    eng.submit(_mk(cfg))
+    eng.drain()
+
+
+def test_deadline_sheds_waiting_requests(paged):
+    """deadline_ms=0 expires at submission: the request is shed with empty
+    tokens before any prefill is spent on it; a generous deadline rides
+    along untouched."""
+    cfg, model, bank = paged
+    eng = PagedDecodeEngine(model=model, params=bank, num_slots=2,
+                            page_size=8, max_seq=32, decode_chunk=4)
+    doomed = eng.submit(_mk(cfg, deadline_ms=0.0))
+    fine = eng.submit(_mk(cfg, deadline_ms=1e9))
+    comps = {c.request_id: c for c in eng.drain()}
+    assert comps[doomed].status == STATUS_SHED
+    assert comps[doomed].finish_reason == FINISH_DEADLINE
+    assert comps[doomed].tokens.size == 0
+    assert comps[fine].status == STATUS_OK and comps[fine].tokens.size == 5
+
+
+def test_deadline_cuts_short_active_requests(paged):
+    """A deadline expiring mid-decode returns the partial prefix with
+    STATUS_TIMEOUT instead of convoying the other slots."""
+    cfg, model, bank = paged
+    eng = PagedDecodeEngine(model=model, params=bank, num_slots=2,
+                            page_size=8, max_seq=32, decode_chunk=4)
+    r = _mk(cfg, n=24)
+    rid = eng.submit(r)
+    eng.step()  # admitted: prefill token + one chunk
+    r.deadline_ms = 0.0  # force expiry while decoding
+    comps = {c.request_id: c for c in eng.drain()}
+    c = comps[rid]
+    assert c.status == STATUS_TIMEOUT and c.finish_reason == FINISH_DEADLINE
+    assert 0 < c.tokens.size < 24  # the partial prefix survived
+    assert eng.num_active == 0  # the slot and its pages were released
+
+
+def test_shed_and_timeout_are_observable(paged):
+    from repro.obs.metrics import registry
+
+    cfg, model, bank = paged
+    eng = PagedDecodeEngine(model=model, params=bank, num_slots=2,
+                            page_size=8, max_seq=32, decode_chunk=4)
+    shed0 = registry().counter(
+        "requests.shed", "requests dropped un-admitted: deadline expired "
+        "while waiting").value
+    eng.submit(_mk(cfg, deadline_ms=0.0))
+    eng.drain()
+    assert registry().counter(
+        "requests.shed", "requests dropped un-admitted: deadline expired "
+        "while waiting").value == shed0 + 1

@@ -2,10 +2,7 @@
 (8 forced host devices) exercises param_structs -> lower -> compile ->
 roofline for a reduced arch, train + decode."""
 
-import json
 import os
-import subprocess
-import sys
 
 import pytest
 
@@ -61,11 +58,9 @@ print(json.dumps(out))
 
 @pytest.mark.slow
 def test_small_mesh_launch_stack():
-    env = dict(os.environ, PYTHONPATH=SRC)
-    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert res.returncode == 0, res.stderr[-3000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    from subproc import run_json
+
+    out = run_json(SCRIPT, timeout=600)
     assert out["decode_ok"]
     assert out["train"]["flops"] > 0
     assert out["train"]["dominant"] in ("compute", "memory", "collective")

@@ -21,10 +21,7 @@ The paged serving contract, pinned:
   into the engine without changing tokens.
 """
 
-import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -368,12 +365,9 @@ def test_sharded_paged_decode_matches_single_device():
     """Chain-sharded paged decode (per-token all-gather + replicated BMA)
     streams the same tokens as the single-device engine, and the 2-D
     (chains x tensor-parallel) bank agrees too."""
-    out = subprocess.run(
-        [sys.executable, "-c", SCRIPT_SHARDED],
-        capture_output=True, text=True, timeout=900,
-        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"})
-    assert out.returncode == 0, out.stderr[-3000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    from subproc import run_json
+
+    res = run_json(SCRIPT_SHARDED, timeout=900)
     assert res["tokens_bitwise"], res
     assert res["chain_axis_sharded"], res
     assert res["twod_tokens_equal"], res

@@ -3,10 +3,7 @@ single-device gather-then-reduce reference (sharded included), bucket
 padding transparent to the statistics, one trace per shape bucket across a
 mixed request stream, and checkpoint restore into the ensemble layout."""
 
-import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -294,12 +291,9 @@ def test_sharded_serve_bitwise_equal_single_device():
     """Acceptance criterion: chain-sharded predictive mean/var/quantiles are
     bitwise-equal to the gathered single-device reference, with one trace
     per shape bucket."""
-    out = subprocess.run(
-        [sys.executable, "-c", SCRIPT_SHARDED],
-        capture_output=True, text=True, timeout=600,
-        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"})
-    assert out.returncode == 0, out.stderr[-3000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    from subproc import run_json
+
+    res = run_json(SCRIPT_SHARDED, timeout=600)
     assert res["bitwise_equal"], res
     assert res["chain_axis_sharded"], res
     assert res["traces"] == res["buckets"], res

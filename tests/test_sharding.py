@@ -3,10 +3,7 @@ the main pytest process keeps seeing 1 device (per the dry-run isolation
 rule).  Verifies that the sharded MoE path equals the local path and that a
 small mesh train step lowers, compiles, and executes."""
 
-import json
 import os
-import subprocess
-import sys
 
 import pytest
 
@@ -91,11 +88,9 @@ print(json.dumps({"loss": float(loss), "loss_ref": float(loss_ref),
 
 
 def _run(script: str) -> dict:
-    env = dict(os.environ, PYTHONPATH=SRC)
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    from subproc import run_json
+
+    return run_json(script, timeout=600)
 
 
 @pytest.mark.slow
